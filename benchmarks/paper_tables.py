@@ -1,0 +1,104 @@
+"""One benchmark per Galaxy paper table/figure, driven by the calibrated
+simulator (cost model validated against Table I) + the faithful planner.
+
+Each function yields (name, us_per_call, derived) rows.
+"""
+from __future__ import annotations
+
+from typing import Iterator, Tuple
+
+from repro.configs import get_config
+from repro.core import costmodel as cm
+from repro.core import simulator as sim
+
+Row = Tuple[str, float, str]
+SEQ = 284  # paper: QNLI subset, average sequence length 284
+
+
+def _fmt(v) -> str:
+    return v if isinstance(v, str) else f"{v:.2f}x"
+
+
+def table1_ondevice() -> Iterator[Row]:
+    """Table I: on-device latency + memory footprint (Nano-M, seq 30)."""
+    dev = [cm.jetson_nano("nano-m", 1.5)]
+    for name in ("distilbert", "bert-l", "gpt2-l", "opt-l", "opt-xl"):
+        cfg = get_config(name)
+        r = sim.simulate(cfg, dev, cm.mbps(125), 30, "local")
+        mem_mb = cm.model_memory_bytes(cfg) / 1e6
+        lat = r.latency * 1e6 if not r.oom else float("nan")
+        yield (f"table1/{name}", lat, f"mem={mem_mb:.0f}MB" + (",OOM" if r.oom else ""))
+
+
+def table4_general() -> Iterator[Row]:
+    """Table IV: Galaxy vs M-LM / SP on homogeneous envs A/B/C @125Mbps."""
+    cases = [
+        ("distilbert", "A"), ("bert-l", "A"), ("bert-l", "B"),
+        ("gpt2-l", "A"), ("gpt2-l", "B"),
+        ("opt-l", "A"), ("opt-l", "B"), ("opt-l", "C"),
+        ("opt-xl", "A"), ("opt-xl", "B"), ("opt-xl", "C"),
+    ]
+    for model, env in cases:
+        t = sim.speedup_table(get_config(model), cm.edge_env(env), cm.mbps(125), SEQ)
+        lat = t["galaxy_s"] * 1e6 if isinstance(t["galaxy_s"], float) else float("nan")
+        yield (
+            f"table4/{model}/env{env}", lat,
+            f"vsM-LM={_fmt(t['megatron'])},vsSP={_fmt(t['sp'])}",
+        )
+
+
+def table5_gpu() -> Iterator[Row]:
+    """Table V: mobile-GPU env (2x Nano GPU @460MHz, 500Mbps)."""
+    devs = [cm.jetson_nano_gpu(6.0)] * 2
+    for model in ("distilbert", "bert-l", "gpt2-l", "opt-l", "opt-xl"):
+        t = sim.speedup_table(get_config(model), devs, cm.mbps(500), SEQ)
+        lat = t["galaxy_s"] * 1e6
+        yield (
+            f"table5/{model}/gpu", lat,
+            f"vsM-LM={_fmt(t['megatron'])},vsSP={_fmt(t['sp'])}",
+        )
+
+
+def fig8_bandwidth() -> Iterator[Row]:
+    """Fig. 8: speedup across D2D bandwidths (bert-l + opt-l, env B)."""
+    for model in ("bert-l", "opt-l"):
+        for mb in (62.5, 125, 250, 500, 1000):
+            t = sim.speedup_table(get_config(model), cm.edge_env("B"), cm.mbps(mb), SEQ)
+            lat = t["galaxy_s"] * 1e6
+            yield (f"fig8/{model}/{mb:g}Mbps", lat, f"vsM-LM={_fmt(t['megatron'])}")
+
+
+def fig9_heterogeneous() -> Iterator[Row]:
+    """Fig. 9: heterogeneous envs D/E/F (capacity+memory-aware planning)."""
+    for model in ("bert-l", "gpt2-l"):
+        for env in ("D", "E", "F"):
+            t = sim.speedup_table(get_config(model), cm.edge_env(env), cm.mbps(125), SEQ)
+            lat = t["galaxy_s"] * 1e6 if isinstance(t["galaxy_s"], float) else float("nan")
+            yield (
+                f"fig9/{model}/env{env}", lat,
+                f"vsM-LM={_fmt(t['megatron'])},vsSP={_fmt(t['sp'])}",
+            )
+
+
+def fig10_weak_scaling() -> Iterator[Row]:
+    for model, paper in (("gpt2-l", 0.81), ("opt-xl", 0.86)):
+        effs = sim.weak_scaling(get_config(model), cm.jetson_nano("nano-m", 1.5),
+                                cm.mbps(1000), 96)
+        for d, e in enumerate(effs, start=1):
+            yield (f"fig10/{model}/{d}dev", float("nan"),
+                   f"eff={e*100:.0f}%" + (f",paper@4={paper*100:.0f}%" if d == 4 else ""))
+
+
+def fig11_strong_scaling() -> Iterator[Row]:
+    for model, paper in (("gpt2-l", 3.05), ("opt-xl", 3.24)):
+        sps = sim.strong_scaling(get_config(model), cm.jetson_nano("nano-m", 1.5),
+                                 cm.mbps(1000), 384)
+        for d, s in enumerate(sps, start=1):
+            yield (f"fig11/{model}/{d}dev", float("nan"),
+                   f"speedup={s:.2f}x" + (f",paper@4={paper:.2f}x" if d == 4 else ""))
+
+
+ALL = [
+    table1_ondevice, table4_general, table5_gpu,
+    fig8_bandwidth, fig9_heterogeneous, fig10_weak_scaling, fig11_strong_scaling,
+]

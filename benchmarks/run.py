@@ -1,0 +1,58 @@
+"""Benchmark harness — one function per paper table/figure + real host
+microbenchmarks + the roofline summary of completed dry-runs.
+
+Prints ``name,us_per_call,derived`` CSV (one row per measurement).
+"""
+from __future__ import annotations
+
+import math
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def _emit(name, us, derived):
+    us_s = "nan" if (isinstance(us, float) and math.isnan(us)) else f"{us:.1f}"
+    print(f"{name},{us_s},{derived}")
+
+
+def roofline_summary():
+    """Summarize any dry-run JSONs already produced (experiments/dryrun/)."""
+    import json
+    import glob
+
+    pat = os.path.join(os.path.dirname(__file__), "..", "experiments", "dryrun", "*.json")
+    for path in sorted(glob.glob(pat)):
+        with open(path) as f:
+            r = json.load(f)
+        name = f"roofline/{r['arch']}/{r['shape']}/{r['mesh']}"
+        if r.get("hmp_sequence_parallel") is False:
+            name += "/tp_only"
+        yield (
+            name,
+            r["roofline_step_s"] * 1e6,
+            f"bottleneck={r['bottleneck']},mfu={r['roofline_mfu']:.3f},"
+            f"useful={r['useful_flops_ratio']:.2f}",
+        )
+
+
+def main() -> None:
+    from benchmarks import microbench, paper_tables
+
+    print("name,us_per_call,derived")
+    for fn in paper_tables.ALL:
+        for row in fn():
+            _emit(*row)
+    for fn in microbench.ALL:
+        try:
+            for row in fn():
+                _emit(*row)
+        except Exception as e:  # noqa: BLE001 — benches report, not crash
+            _emit(f"micro/{fn.__name__}", float("nan"), f"error:{type(e).__name__}")
+    for row in roofline_summary():
+        _emit(*row)
+
+
+if __name__ == "__main__":
+    main()

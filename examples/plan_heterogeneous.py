@@ -1,0 +1,44 @@
+"""Heterogeneity + memory aware planning (paper Alg. 1) end to end:
+profile -> plan -> simulate, on the paper's own edge environments.
+
+    PYTHONPATH=src python examples/plan_heterogeneous.py
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.configs import get_config
+from repro.core import costmodel as cm
+from repro.core import planner, simulator as sim
+from repro.core.profiler import AnalyticProfiler
+
+
+def main():
+    cfg = get_config("bert-l")
+    for env_id in ("C", "D", "E", "F"):
+        devices = cm.edge_env(env_id)
+        prof = AnalyticProfiler(cfg, seq=284)
+        dev_profiles = prof.device_profiles(devices)
+        model_profile = prof.model_profile()
+        plan = planner.plan(model_profile, dev_profiles)
+
+        names = "+".join(d.name for d in devices)
+        print(f"\nenv {env_id} ({names}):")
+        if not plan.feasible:
+            print(f"  INFEASIBLE: {plan.reason}")
+            continue
+        for i, d in enumerate(devices):
+            mem = plan.memory_per_device(model_profile)[i] / 1e6
+            print(f"  {d.name:9s} heads={int(plan.mha[i]):2d}/16 "
+                  f"mlp_cols={int(plan.mlp[i]):4d}/4096 "
+                  f"seq={plan.seq[i]*100:.0f}%  mem={mem:.0f}MB "
+                  f"(budget {d.memory_budget/1e6:.0f}MB)")
+        t = sim.speedup_table(cfg, devices, cm.mbps(125), 284)
+        f = lambda v: v if isinstance(v, str) else f"{v:.2f}x"
+        print(f"  galaxy latency {t['galaxy_s']:.2f}s | "
+              f"vs Megatron-LM {f(t['megatron'])} | vs SP {f(t['sp'])}")
+
+
+if __name__ == "__main__":
+    main()

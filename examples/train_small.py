@@ -1,0 +1,24 @@
+"""End-to-end driver (deliverable b): train a ~100M-param model for a few
+hundred steps on synthetic data, with checkpointing.
+
+    PYTHONPATH=src python examples/train_small.py [--steps 300]
+
+~100M params: qwen1.5-0.5b family reduced to d_model=512 keeps the full
+code path (rope, GQA, swiglu, tied embeddings) at laptop scale.
+"""
+import os
+import subprocess
+import sys
+
+REPO = os.path.join(os.path.dirname(__file__), "..")
+
+if __name__ == "__main__":
+    steps = sys.argv[sys.argv.index("--steps") + 1] if "--steps" in sys.argv else "300"
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+    subprocess.run(
+        [sys.executable, "-m", "repro.launch.train",
+         "--arch", "qwen1.5-0.5b", "--reduce", "--d-model", "512",
+         "--steps", steps, "--batch", "8", "--seq", "128",
+         "--ckpt", "/tmp/galaxy_train_small", "--ckpt-every", "100"],
+        env=env, check=True,
+    )

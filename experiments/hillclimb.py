@@ -1,0 +1,78 @@
+"""§Perf hillclimbs: the three chosen (arch x shape) pairs, iterated per
+the hypothesis -> change -> measure -> validate methodology.  Each variant
+re-lowers + re-analyses against the single-pod production mesh and saves a
+tagged JSON next to the baselines.
+
+Pairs (chosen from the 40-combo baseline table):
+  1. granite-moe-3b-a800m / train_4k   — worst roofline MFU (0.040)
+  2. qwen1.5-110b / decode_32k         — most collective-bound (2.04 s)
+  3. codeqwen1.5-7b / prefill_32k      — most paper-representative
+                                          (single-shot inference prefill)
+
+Run: python experiments/hillclimb.py  (sets its own XLA device flags)
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import json
+
+from repro.launch import dryrun
+
+
+def report(tag, r):
+    print(
+        f"[{tag}] tc={r['t_compute_s']:.4f} tm={r['t_memory_s']:.4f} "
+        f"tcoll={r['t_collective_s']:.4f} bneck={r['bottleneck']} "
+        f"useful={r['useful_flops_ratio']:.2f} mfu={r['roofline_mfu']:.3f} "
+        f"temp={(r['temp_bytes'] or 0)/1e9:.1f}GB args={(r['argument_bytes'] or 0)/1e9:.1f}GB",
+        flush=True,
+    )
+
+
+def main():
+    only = sys.argv[1] if len(sys.argv) > 1 else ""
+
+    runs = [
+        # --- #1 granite-moe train_4k -------------------------------------
+        ("granite-moe-3b-a800m", "train_4k", "h1a_remat_dots",
+         dict(remat_policy="dots"), {}),
+        ("granite-moe-3b-a800m", "train_4k", "h1b_cf125",
+         dict(remat_policy="dots", moe_capacity_factor=1.25), {}),
+        ("granite-moe-3b-a800m", "train_4k", "h1c_attnchunk",
+         dict(remat_policy="dots", moe_capacity_factor=1.25, attn_chunk=1024), {}),
+        # --- #2 qwen1.5-110b decode_32k -------------------------------------
+        ("qwen1.5-110b", "decode_32k", "h2a_weights_model_only",
+         {}, dict(serve_weights_model_only=True)),
+        ("qwen1.5-110b", "decode_32k", "h2b_fp8_weights",
+         dict(param_dtype="float8_e4m3fn"), dict(serve_weights_model_only=True)),
+        # --- #3 codeqwen prefill_32k ----------------------------------------
+        ("codeqwen1.5-7b", "prefill_32k", "h3a_attnchunk",
+         dict(attn_chunk=2048), {}),
+    ]
+    for arch, shape, tag, cfg_over, rules_over in runs:
+        if only and only not in tag:
+            continue
+        try:
+            r = dryrun.run_one(arch, shape, variant=tag, cfg_overrides=cfg_over,
+                               rules_overrides=rules_over, verbose=False)
+            report(f"{arch}/{shape}/{tag}", r)
+        except Exception as e:  # noqa: BLE001
+            print(f"[{tag}] FAILED: {type(e).__name__}: {str(e)[:300]}", flush=True)
+
+    # paper-faithful comparison: Megatron-TP layout (no SP) on the
+    # paper-representative pair — quantifies HMP's gain in roofline terms
+    if not only or "tponly" in only:
+        try:
+            r = dryrun.run_one("codeqwen1.5-7b", "prefill_32k",
+                               hmp_sequence_parallel=False, verbose=False)
+            report("codeqwen1.5-7b/prefill_32k/tp_only_baseline", r)
+        except Exception as e:  # noqa: BLE001
+            print(f"[tp_only] FAILED: {e}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,62 @@
+"""Regenerate the EXPERIMENTS.md roofline/dry-run tables from the JSONs in
+experiments/dryrun/.  Usage: python experiments/make_report.py [mesh]
+"""
+import glob
+import json
+import os
+import sys
+
+HERE = os.path.dirname(__file__)
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def load(mesh: str, suffix: str = ""):
+    rows = []
+    for p in sorted(glob.glob(os.path.join(HERE, "dryrun", f"*__{mesh}{suffix}.json"))):
+        name = os.path.basename(p)
+        if suffix == "" and "__tp_only" in name:
+            continue
+        rows.append(json.load(open(p)))
+    rows.sort(key=lambda r: (r["arch"], SHAPE_ORDER.index(r["shape"])))
+    return rows
+
+
+def roofline_table(mesh: str, suffix: str = "") -> str:
+    rows = load(mesh, suffix)
+    out = [
+        "| arch | shape | t_compute (s) | t_memory (s) | t_collective (s) "
+        "| bottleneck | 6ND/HLO | roofline MFU | temp GB/chip |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in rows:
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['t_compute_s']:.4f} "
+            f"| {r['t_memory_s']:.4f} | {r['t_collective_s']:.4f} "
+            f"| **{r['bottleneck']}** | {r['useful_flops_ratio']:.2f} "
+            f"| {r['roofline_mfu']:.3f} | {(r['temp_bytes'] or 0)/1e9:.1f} |"
+        )
+    return "\n".join(out)
+
+
+def collective_mix(mesh: str) -> str:
+    rows = load(mesh)
+    out = ["| arch | shape | AG MB | AR MB | A2A MB | CP MB | total MB |",
+           "|---|---|---|---|---|---|---|"]
+    for r in rows:
+        c = r["collective_bytes_per_chip"]
+        out.append(
+            "| {arch} | {shape} | {ag:.0f} | {ar:.0f} | {a2a:.0f} | {cp:.0f} | {tot:.0f} |".format(
+                arch=r["arch"], shape=r["shape"],
+                ag=c.get("all-gather", 0) / 1e6, ar=c.get("all-reduce", 0) / 1e6,
+                a2a=c.get("all-to-all", 0) / 1e6,
+                cp=c.get("collective-permute", 0) / 1e6, tot=c.get("total", 0) / 1e6,
+            )
+        )
+    return "\n".join(out)
+
+
+if __name__ == "__main__":
+    mesh = sys.argv[1] if len(sys.argv) > 1 else "16x16"
+    print(roofline_table(mesh))
+    print()
+    print(collective_mix(mesh))

@@ -1,0 +1,4 @@
+"""Galaxy's primary contribution: hybrid model parallelism (hmp, ring),
+heterogeneity+memory-aware planning (planner, profiler), and the calibrated
+edge-cluster evaluation (costmodel, simulator)."""
+from repro.core import costmodel, hmp, planner, profiler, ring, simulator  # noqa: F401

@@ -1,0 +1,134 @@
+"""Analytic device/link cost model.
+
+Calibrated against the paper's own measurements (§II-B Table I):
+* Bert-L (24L, d=1024) at seq 30 on Nano-M (0.825 GHz) takes 2.43 s
+  -> ~7.1 GFLOP/s effective, i.e. ~8.6 GFLOP/s per GHz of the quad A53.
+  The same constant predicts DistilBert at 0.36 s (paper: 0.37 s).
+* Memory footprints are fp16 parameter bytes (DistilBert 132 MB ~ paper
+  130 MB, Bert-L 680 MB = paper 680 MB, OPT-XL 5.4 GB = paper 5.4 GB).
+
+TPU v5e constants are the roofline terms' denominators (task spec):
+197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+from repro.configs.base import ModelConfig
+
+# --- edge devices ------------------------------------------------------------
+
+GFLOPS_PER_GHZ = 8.6e9           # calibrated vs paper Table I (CPU mode)
+NANO_MEM_BW = 4.0e9              # effective LPDDR4 bandwidth under CPU load
+NANO_GPU_GFLOPS = 120e9          # 128-core Maxwell @460MHz, ~fp16 effective
+BYTES_FP16 = 2
+# The paper's prototype (PyTorch + gloo on CPU) synchronizes fp32 activation
+# tensors even when weights are fp16 — gloo has no fp16 ring collectives.
+BYTES_ACT = 4
+
+
+@dataclasses.dataclass(frozen=True)
+class DeviceSpec:
+    name: str
+    flops: float            # effective FLOP/s
+    mem_bw: float           # effective bytes/s
+    memory_budget: float    # bytes usable for weights
+
+
+def jetson_nano(kind: str, memory_budget_gb: float) -> DeviceSpec:
+    freq = {"nano-l": 1.47e9, "nano-m": 0.825e9, "nano-s": 0.403e9}[kind]
+    return DeviceSpec(
+        name=kind,
+        flops=GFLOPS_PER_GHZ * freq / 1e9,
+        mem_bw=NANO_MEM_BW,
+        memory_budget=memory_budget_gb * 1e9,
+    )
+
+
+def jetson_nano_gpu(memory_budget_gb: float = 1.5) -> DeviceSpec:
+    return DeviceSpec("nano-gpu", NANO_GPU_GFLOPS, 12e9, memory_budget_gb * 1e9)
+
+
+# paper Table III edge environments
+def edge_env(env_id: str) -> list:
+    n = jetson_nano
+    return {
+        "A": [n("nano-m", 1.5)] * 2,
+        "B": [n("nano-m", 1.5)] * 3,
+        "C": [n("nano-m", 1.5)] * 4,
+        "D": [n("nano-l", 1.5), n("nano-m", 1.2)],
+        "E": [n("nano-l", 1.5), n("nano-s", 0.7)],
+        "F": [n("nano-l", 1.5), n("nano-m", 1.2), n("nano-s", 0.7)],
+    }[env_id]
+
+
+@dataclasses.dataclass(frozen=True)
+class LinkSpec:
+    bandwidth: float        # bytes/s
+    latency: float = 1e-3   # per-hop software+switch latency (Ethernet)
+
+
+def mbps(x: float) -> LinkSpec:
+    return LinkSpec(bandwidth=x * 1e6 / 8)
+
+
+# --- TPU v5e (roofline targets) -------------------------------------------------
+
+TPU_V5E = {
+    "peak_flops": 197e12,     # bf16
+    "hbm_bw": 819e9,          # bytes/s
+    "ici_bw": 50e9,           # bytes/s per link
+    "hbm_bytes": 16e9,
+}
+
+
+# --- collective cost (ring algorithms, paper §III-B-5) ----------------------------
+
+def t_allgather(n_bytes: float, d: int, link: LinkSpec) -> float:
+    """Ring AllGather of a global tensor of n_bytes (each device holds n/D)."""
+    if d <= 1:
+        return 0.0
+    return (d - 1) / d * n_bytes / link.bandwidth + (d - 1) * link.latency
+
+
+def t_reducescatter(n_bytes: float, d: int, link: LinkSpec) -> float:
+    if d <= 1:
+        return 0.0
+    return (d - 1) / d * n_bytes / link.bandwidth + (d - 1) * link.latency
+
+
+def t_allreduce(n_bytes: float, d: int, link: LinkSpec) -> float:
+    """Ring AllReduce = ReduceScatter + AllGather (paper §III-B-5)."""
+    return t_allgather(n_bytes, d, link) + t_reducescatter(n_bytes, d, link)
+
+
+# --- per-layer workload profile of a paper-style Transformer layer ----------------
+
+def layer_profile(cfg: ModelConfig, seq: int) -> Dict[str, float]:
+    """FLOPs / bytes of one Transformer layer (Fig. 2) at a sequence length."""
+    d, ff, h = cfg.d_model, cfg.d_ff, cfg.num_heads
+    hd = cfg.head_dim
+    kv = cfg.num_kv_heads
+    qkvo_flops = 2 * seq * d * (h * hd + 2 * kv * hd) + 2 * seq * (h * hd) * d
+    attn_flops = 2 * 2 * seq * seq * h * hd
+    gate = 3 if cfg.activation in ("swiglu", "geglu") else 2
+    mlp_flops = gate * 2 * seq * d * ff
+    # connective: dropout + residual + layernorm, ~4 passes over activations
+    con_bytes = 2 * 4 * seq * d * BYTES_ACT * 2
+    m_att = (d * (h * hd + 2 * kv * hd) + (h * hd) * d) * BYTES_FP16
+    m_mlp = gate * d * ff * BYTES_FP16
+    return {
+        "mha_flops": qkvo_flops + attn_flops,
+        "mlp_flops": mlp_flops,
+        "con_bytes": con_bytes,
+        "m_att": m_att,
+        "m_mlp": m_mlp,
+        "act_bytes": seq * d * BYTES_ACT,
+    }
+
+
+def model_memory_bytes(cfg: ModelConfig) -> float:
+    prof = layer_profile(cfg, 1)
+    embed = cfg.vocab_size * cfg.d_model * BYTES_FP16
+    return cfg.num_layers * (prof["m_att"] + prof["m_mlp"]) + embed

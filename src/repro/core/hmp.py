@@ -1,0 +1,233 @@
+"""Hybrid Model Parallelism (paper §III-B) as explicit shard_map programs.
+
+This module is the *faithful* executable of the paper's Fig. 5 on a
+Transformer layer (post-LN, as in Fig. 2): TP over heads (MHA) and FFN
+columns (MLP), SP over the connective blocks, with a ReduceScatter exiting
+each TP block and an AllGather entering it.  Three schedules:
+
+* ``hmp``       — Galaxy HMP, synchronous collectives (faithful baseline)
+* ``hmp_ring``  — Galaxy HMP + tile-based ring overlap (paper §III-D)
+* ``megatron``  — Megatron-LM TP baseline: AllReduce after each block,
+                  connective blocks computed redundantly on every device
+* ``sp``        — pure Sequence Parallelism baseline: weights replicated,
+                  2 AllGathers (K and V) per MHA block
+
+All four produce identical math (up to summation order); tests assert
+allclose against the single-device reference.  The production models use
+the GSPMD expression of the same layout (models/sharding.py); this module
+is the paper-exact schedule used for equivalence tests, benchmarks, and as
+the template for the perf work.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.experimental.shard_map import shard_map
+
+from repro.core.ring import (
+    matmul_ring_reducescatter,
+    ring_allgather_matmul,
+    sync_allgather_matmul,
+    sync_matmul_reducescatter,
+)
+
+AXIS = "model"
+
+
+# --- paper-style layer (Fig. 2): post-LN MHA + MLP --------------------------
+
+def init_layer_params(key, d_model: int, num_heads: int, d_ff: int, dtype=jnp.float32) -> Dict:
+    hd = d_model // num_heads
+    ks = jax.random.split(key, 6)
+    s = 0.02
+    return {
+        "wq": jax.random.normal(ks[0], (d_model, num_heads, hd), dtype) * s,
+        "wk": jax.random.normal(ks[1], (d_model, num_heads, hd), dtype) * s,
+        "wv": jax.random.normal(ks[2], (d_model, num_heads, hd), dtype) * s,
+        "wo": jax.random.normal(ks[3], (num_heads, hd, d_model), dtype) * s,
+        "w1": jax.random.normal(ks[4], (d_model, d_ff), dtype) * s,
+        "w2": jax.random.normal(ks[5], (d_ff, d_model), dtype) * s,
+        "ln1_s": jnp.ones((d_model,), dtype),
+        "ln1_b": jnp.zeros((d_model,), dtype),
+        "ln2_s": jnp.ones((d_model,), dtype),
+        "ln2_b": jnp.zeros((d_model,), dtype),
+    }
+
+
+def layer_param_specs(megatron: bool = False, sp: bool = False) -> Dict:
+    """PartitionSpecs for the layer params under each parallelism plan."""
+    if sp:  # weights replicated
+        return {k: P() for k in (
+            "wq", "wk", "wv", "wo", "w1", "w2", "ln1_s", "ln1_b", "ln2_s", "ln2_b")}
+    return {
+        "wq": P(None, AXIS, None),
+        "wk": P(None, AXIS, None),
+        "wv": P(None, AXIS, None),
+        "wo": P(AXIS, None, None),
+        "w1": P(None, AXIS),
+        "w2": P(AXIS, None),
+        "ln1_s": P(), "ln1_b": P(), "ln2_s": P(), "ln2_b": P(),
+    }
+
+
+def _ln(x, s, b, eps=1e-5):
+    xf = x.astype(jnp.float32)
+    mu = xf.mean(-1, keepdims=True)
+    var = ((xf - mu) ** 2).mean(-1, keepdims=True)
+    return ((xf - mu) * jax.lax.rsqrt(var + eps) * s + b).astype(x.dtype)
+
+
+def _attention(q, k, v):
+    """q,k,v: (B, S, H, hd) -> (B, S, H, hd), causal."""
+    hd = q.shape[-1]
+    scores = jnp.einsum("bshd,bthd->bhst", q, k).astype(jnp.float32) / np.sqrt(hd)
+    s, t = scores.shape[-2], scores.shape[-1]
+    mask = jnp.tril(jnp.ones((s, t), bool), k=t - s)
+    scores = jnp.where(mask, scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    return jnp.einsum("bhst,bthd->bshd", probs, v)
+
+
+def reference_layer(p: Dict, x):
+    """Single-device oracle of the paper's Fig. 2 layer (post-LN)."""
+    b, s, d = x.shape
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    attn = _attention(q, k, v)
+    g = jnp.einsum("bshk,hkd->bsd", attn, p["wo"])
+    x = _ln(x + g, p["ln1_s"], p["ln1_b"])
+    h = jax.nn.gelu(jnp.einsum("bsd,df->bsf", x, p["w1"]))
+    f = jnp.einsum("bsf,fd->bsd", h, p["w2"])
+    x = _ln(x + f, p["ln2_s"], p["ln2_b"])
+    return x
+
+
+# --- Galaxy HMP (shard_map) ---------------------------------------------------
+
+def _hmp_layer_local(p, x_loc, *, overlap: bool):
+    """Body on one device.  x_loc: (B, S_loc, d) sequence shard; params are
+    head/column shards.  TP blocks see the full sequence; connective blocks
+    see the local shard (paper Fig. 5)."""
+    ag_mm = ring_allgather_matmul if overlap else sync_allgather_matmul
+    mm_rs = matmul_ring_reducescatter if overlap else sync_matmul_reducescatter
+
+    d_model = x_loc.shape[-1]
+    h_loc, hd = p["wq"].shape[1], p["wq"].shape[2]
+
+    # ---- MHA block (TP over heads) ----
+    wqkv = jnp.concatenate(
+        [p["wq"].reshape(d_model, -1), p["wk"].reshape(d_model, -1),
+         p["wv"].reshape(d_model, -1)], axis=1)
+    qkv = ag_mm(x_loc, wqkv, AXIS)  # AllGather ⊗ GEMM1  (B, S, 3*h_loc*hd)
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+    shape = (*q.shape[:2], h_loc, hd)
+    attn = _attention(q.reshape(shape), k.reshape(shape), v.reshape(shape))
+    attn = attn.reshape(*q.shape[:2], h_loc * hd)
+    g_loc = mm_rs(attn, p["wo"].reshape(-1, d_model), AXIS)  # GEMM ⊗ ReduceScatter
+
+    # ---- connective block (SP over local sequence shard) ----
+    x_loc = _ln(x_loc + g_loc, p["ln1_s"], p["ln1_b"])
+
+    # ---- MLP block (TP over columns) ----
+    h = ag_mm(x_loc, p["w1"], AXIS)
+    h = jax.nn.gelu(h)
+    f_loc = mm_rs(h, p["w2"], AXIS)
+
+    # ---- connective block ----
+    x_loc = _ln(x_loc + f_loc, p["ln2_s"], p["ln2_b"])
+    return x_loc
+
+
+def hmp_layer(p: Dict, x, mesh: Mesh, *, overlap: bool = False):
+    """Galaxy HMP layer. x: (B, S, d) global; S must divide the model axis."""
+    fn = shard_map(
+        functools.partial(_hmp_layer_local, overlap=overlap),
+        mesh=mesh,
+        in_specs=(layer_param_specs(), P(None, AXIS, None)),
+        out_specs=P(None, AXIS, None),
+    )
+    return fn(p, x)
+
+
+# --- Megatron-LM TP baseline -----------------------------------------------
+
+def _megatron_layer_local(p, x):
+    """x replicated; AllReduce after each block; connective computed
+    redundantly on every device (the waste HMP eliminates)."""
+    d_model = x.shape[-1]
+    h_loc, hd = p["wq"].shape[1], p["wq"].shape[2]
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    attn = _attention(q, k, v)
+    g = jnp.einsum("bshk,hkd->bsd", attn, p["wo"])
+    g = jax.lax.psum(g, AXIS)  # AllReduce #1
+    x = _ln(x + g, p["ln1_s"], p["ln1_b"])  # redundant on all devices
+    h = jax.nn.gelu(jnp.einsum("bsd,df->bsf", x, p["w1"]))
+    f = jnp.einsum("bsf,fd->bsd", h, p["w2"])
+    f = jax.lax.psum(f, AXIS)  # AllReduce #2
+    x = _ln(x + f, p["ln2_s"], p["ln2_b"])
+    return x
+
+
+def megatron_layer(p: Dict, x, mesh: Mesh):
+    fn = shard_map(
+        _megatron_layer_local,
+        mesh=mesh,
+        in_specs=(layer_param_specs(), P()),
+        out_specs=P(),
+    )
+    return fn(p, x)
+
+
+# --- pure Sequence Parallelism baseline ---------------------------------------
+
+def _sp_layer_local(p, x_loc):
+    """x seq-sharded; weights fully replicated (the memory wall).  K/V need
+    the whole sequence: 2 AllGathers per MHA block (paper §IV-A)."""
+    q = jnp.einsum("bsd,dhk->bshk", x_loc, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x_loc, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x_loc, p["wv"])
+    k = jax.lax.all_gather(k, AXIS, axis=1, tiled=True)  # AllGather #1
+    v = jax.lax.all_gather(v, AXIS, axis=1, tiled=True)  # AllGather #2
+    # causal offset of the local query block
+    idx = jax.lax.axis_index(AXIS)
+    s_loc = q.shape[1]
+    hd = q.shape[-1]
+    scores = jnp.einsum("bshd,bthd->bhst", q, k).astype(jnp.float32) / np.sqrt(hd)
+    q_pos = idx * s_loc + jnp.arange(s_loc)
+    k_pos = jnp.arange(k.shape[1])
+    mask = k_pos[None, :] <= q_pos[:, None]
+    scores = jnp.where(mask, scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    attn = jnp.einsum("bhst,bthd->bshd", probs, v)
+    g = jnp.einsum("bshk,hkd->bsd", attn, p["wo"])
+    x_loc = _ln(x_loc + g, p["ln1_s"], p["ln1_b"])
+    h = jax.nn.gelu(jnp.einsum("bsd,df->bsf", x_loc, p["w1"]))
+    f = jnp.einsum("bsf,fd->bsd", h, p["w2"])
+    x_loc = _ln(x_loc + f, p["ln2_s"], p["ln2_b"])
+    return x_loc
+
+
+def sp_layer(p: Dict, x, mesh: Mesh):
+    fn = shard_map(
+        _sp_layer_local,
+        mesh=mesh,
+        in_specs=(layer_param_specs(sp=True), P(None, AXIS, None)),
+        out_specs=P(None, AXIS, None),
+    )
+    return fn(p, x)
+
+
+SCHEDULES = {
+    "hmp": lambda p, x, mesh: hmp_layer(p, x, mesh, overlap=False),
+    "hmp_ring": lambda p, x, mesh: hmp_layer(p, x, mesh, overlap=True),
+    "megatron": megatron_layer,
+    "sp": sp_layer,
+}

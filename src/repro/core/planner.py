@@ -1,0 +1,182 @@
+"""Heterogeneity and Memory Aware Workload Planning (paper §III-C, Alg. 1).
+
+Two-step heuristic, faithful to the paper:
+
+1. ``BalancedPartition`` — distribute MHA heads / MLP columns proportional
+   to each device's computing capacity V_d (Eq. 6), ignoring memory.
+2. ``MemoryAwareBalancing`` — recursively shift the overflowing workload of
+   OOM devices to devices with memory headroom, proportional to the free
+   devices' capacities; a device that was shifted off is removed from the
+   candidate list and the routine recurses.  MLP first (finer granularity),
+   then MHA (lines 21-22).  If OOM persists, the cluster cannot host the
+   model: planning fails (lines 23-24).
+
+SP (connective blocks) is an equal split (§III-C-2): its latency is memory-
+bandwidth-bound, and uniform tiles keep the ring-overlap schedule aligned.
+
+On a homogeneous TPU mesh the proportional step degenerates to an equal
+split; the planner's memory-aware half then answers "how many chips does
+this model need" (see launch/dryrun.py budget checks).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class DeviceProfile:
+    name: str
+    capacity: float        # V_d = 1 / (L(MHA, full, d) + L(MLP, full, d))  [Eq. 6]
+    memory_budget: float   # bytes available for model weights
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelProfile:
+    """Per-layer workload/memory profile (from repro.core.profiler)."""
+    name: str
+    num_layers: int
+    num_heads: int         # MHA partition granularity (paper: head dim)
+    mlp_columns: int       # MLP partition granularity (paper: column dim)
+    m_att: float           # bytes of one full MHA block's weights
+    m_mlp: float           # bytes of one full MLP block's weights
+
+
+@dataclasses.dataclass
+class Plan:
+    mha: np.ndarray        # heads per device   (A)
+    mlp: np.ndarray        # columns per device (B)
+    seq: np.ndarray        # sequence fractions (S) — equal split
+    feasible: bool
+    reason: str = ""
+
+    def memory_per_device(self, model: ModelProfile) -> np.ndarray:
+        a = self.mha / max(self.mha.sum(), 1)
+        b = self.mlp / max(self.mlp.sum(), 1)
+        return model.num_layers * (model.m_att * a + model.m_mlp * b)
+
+
+def _largest_remainder_round(shares: np.ndarray, total: int) -> np.ndarray:
+    """Round non-negative real shares to integers preserving the sum."""
+    floor = np.floor(shares).astype(int)
+    rem = shares - floor
+    short = total - floor.sum()
+    order = np.argsort(-rem)
+    out = floor.copy()
+    for i in range(int(short)):
+        out[order[i % len(order)]] += 1
+    return out
+
+
+def balanced_partition(total_units: int, capacities: Sequence[float]) -> np.ndarray:
+    """Alg. 1 lines 1-8: workload proportional to computing capacity."""
+    v = np.asarray(capacities, dtype=float)
+    shares = v / v.sum() * total_units
+    return _largest_remainder_round(shares, total_units)
+
+
+def memory_aware_balancing(
+    units: np.ndarray,
+    unit_mem: float,
+    capacities: Sequence[float],
+    budgets: Sequence[float],
+    other_mem: np.ndarray,
+    active: Optional[List[int]] = None,
+) -> Optional[np.ndarray]:
+    """Alg. 1 lines 9-19, for one block type T.
+
+    units:     integer workload units currently assigned per device
+    unit_mem:  bytes of model weights per workload unit (l * M_T / total_T)
+    other_mem: bytes per device already committed by the *other* block type
+    active:    list L of candidate devices (shrinks on recursion)
+
+    Returns the rebalanced units, or None if infeasible.
+    """
+    units = units.copy().astype(int)
+    v = np.asarray(capacities, dtype=float)
+    budgets = np.asarray(budgets, dtype=float)
+    if active is None:
+        active = list(range(len(units)))
+
+    def mem(d):
+        return units[d] * unit_mem + other_mem[d]
+
+    oom = [d for d in active if mem(d) > budgets[d]]
+    if not oom:
+        return units
+    free = [d for d in active if d not in oom and mem(d) < budgets[d]]
+    if not free:
+        return None
+
+    next_active = [d for d in active if d not in oom]
+    for o in oom:
+        headroom_units = int(np.floor((budgets[o] - other_mem[o]) / unit_mem))
+        headroom_units = max(headroom_units, 0)
+        waiting_shift = units[o] - headroom_units  # overflowing workload
+        if waiting_shift <= 0:
+            continue
+        vf = v[free]
+        shares = vf / vf.sum() * waiting_shift
+        moved = _largest_remainder_round(shares, waiting_shift)
+        for f, mv in zip(free, moved):
+            units[f] += int(mv)
+        units[o] = headroom_units
+    return memory_aware_balancing(units, unit_mem, v, budgets, other_mem, next_active)
+
+
+def plan(model: ModelProfile, devices: Sequence[DeviceProfile]) -> Plan:
+    """Full Algorithm 1."""
+    v = [d.capacity for d in devices]
+    budgets = [d.memory_budget for d in devices]
+    n = len(devices)
+
+    a = balanced_partition(model.num_heads, v)        # line 7
+    b = balanced_partition(model.mlp_columns, v)      # line 8
+    seq = np.full(n, 1.0 / n)                         # §III-C-2: equal SP split
+
+    att_unit = model.num_layers * model.m_att / model.num_heads
+    mlp_unit = model.num_layers * model.m_mlp / model.mlp_columns
+
+    # line 21: rebalance MLP first (finer granularity), MHA memory fixed
+    b2 = memory_aware_balancing(b, mlp_unit, v, budgets, other_mem=a * att_unit)
+    if b2 is None:
+        return Plan(a, b, seq, False, "MLP rebalancing infeasible")
+    # line 22: rebalance MHA with the final MLP memory committed
+    a2 = memory_aware_balancing(a, att_unit, v, budgets, other_mem=b2 * mlp_unit)
+    if a2 is None:
+        return Plan(a, b2, seq, False, "MHA rebalancing infeasible")
+
+    # lines 23-24: final feasibility check
+    total = a2 * att_unit + b2 * mlp_unit
+    if np.any(total > np.asarray(budgets)):
+        return Plan(a2, b2, seq, False, "OOM persists after redistribution")
+    return Plan(a2, b2, seq, True)
+
+
+def block_latency(units: int, total_units: int, total_flops: float, capacity: float) -> float:
+    """L(T, C_d, d): execution latency of a block shard on one device."""
+    return (units / total_units) * total_flops / capacity
+
+
+def plan_latency(
+    plan_: Plan,
+    model: ModelProfile,
+    devices: Sequence[DeviceProfile],
+    mha_flops: float,
+    mlp_flops: float,
+    con_time_full: float,
+) -> float:
+    """Eq. 4/5 objective: per-layer straggler latency under a plan.
+    capacity here is normalized so total_flops/capacity = seconds."""
+    t_mha = max(
+        block_latency(int(a), model.num_heads, mha_flops, d.capacity)
+        for a, d in zip(plan_.mha, devices)
+    )
+    t_mlp = max(
+        block_latency(int(b), model.mlp_columns, mlp_flops, d.capacity)
+        for b, d in zip(plan_.mlp, devices)
+    )
+    t_con = con_time_full * float(np.max(plan_.seq))
+    return t_mha + t_mlp + t_con

@@ -1,0 +1,124 @@
+"""Galaxy Profiler (paper §III-A step 1).
+
+Produces the run-time traces the planner consumes:
+
+* per-device capacity V_d (Eq. 6): inverse time of one full MHA + MLP block
+* per-block memory footprints (M_att, M_mlp)
+* per-partition-configuration latency tables L(T, C_d, d)
+
+Two backends:
+- ``AnalyticProfiler`` — the calibrated cost model (simulated Jetson
+  clusters; used by the planner + the paper-table simulator).
+- ``HostProfiler``   — times real jitted blocks on this host (used in
+  examples/tests to demonstrate the profiling workflow end-to-end).
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core import costmodel
+from repro.core.costmodel import DeviceSpec
+from repro.core.planner import DeviceProfile, ModelProfile
+
+
+class AnalyticProfiler:
+    def __init__(self, cfg: ModelConfig, seq: int):
+        self.cfg = cfg
+        self.seq = seq
+        self.prof = costmodel.layer_profile(cfg, seq)
+
+    def capacity(self, dev: DeviceSpec) -> float:
+        """V_d per Eq. 6 (1/seconds for the full MHA+MLP blocks)."""
+        t = (self.prof["mha_flops"] + self.prof["mlp_flops"]) / dev.flops
+        return 1.0 / t
+
+    def device_profiles(self, devices: Sequence[DeviceSpec]) -> List[DeviceProfile]:
+        return [
+            DeviceProfile(d.name, self.capacity(d), d.memory_budget) for d in devices
+        ]
+
+    def model_profile(self) -> ModelProfile:
+        cfg = self.cfg
+        return ModelProfile(
+            name=cfg.name,
+            num_layers=cfg.num_layers,
+            num_heads=cfg.num_heads,
+            mlp_columns=cfg.d_ff,
+            m_att=self.prof["m_att"],
+            m_mlp=self.prof["m_mlp"],
+        )
+
+    def block_latency(self, block: str, frac: float, dev: DeviceSpec) -> float:
+        """L(T, C_d, d) for a fractional partition (paper's latency table)."""
+        if block == "mha":
+            return frac * self.prof["mha_flops"] / dev.flops
+        if block == "mlp":
+            return frac * self.prof["mlp_flops"] / dev.flops
+        if block == "con":
+            return frac * self.prof["con_bytes"] / dev.mem_bw
+        raise ValueError(block)
+
+
+class HostProfiler:
+    """Times real jitted MHA/MLP blocks on the current host (calibration-
+    data-driven, as the paper's profiler runs on the physical devices)."""
+
+    def __init__(self, cfg: ModelConfig, seq: int, iters: int = 5):
+        self.cfg = cfg
+        self.seq = seq
+        self.iters = iters
+
+    def _time(self, fn, *args) -> float:
+        fn_j = jax.jit(fn)
+        out = fn_j(*args)
+        jax.block_until_ready(out)
+        t0 = time.perf_counter()
+        for _ in range(self.iters):
+            out = fn_j(*args)
+        jax.block_until_ready(out)
+        return (time.perf_counter() - t0) / self.iters
+
+    def measure_blocks(self, heads: int, columns: int) -> Dict[str, float]:
+        """Measured L(MHA, a, host), L(MLP, b, host), L(CON, full, host)."""
+        cfg, s = self.cfg, self.seq
+        d, hd = cfg.d_model, cfg.head_dim
+        key = jax.random.PRNGKey(0)
+        x = jax.random.normal(key, (1, s, d), jnp.float32)
+        wqkv = jax.random.normal(key, (d, 3 * heads * hd), jnp.float32)
+        wo = jax.random.normal(key, (heads * hd, d), jnp.float32)
+        w1 = jax.random.normal(key, (d, columns), jnp.float32)
+        w2 = jax.random.normal(key, (columns, d), jnp.float32)
+
+        def mha(x, wqkv, wo):
+            qkv = x @ wqkv
+            q, k, v = jnp.split(qkv, 3, -1)
+            q = q.reshape(1, s, heads, hd)
+            k = k.reshape(1, s, heads, hd)
+            v = v.reshape(1, s, heads, hd)
+            sc = jnp.einsum("bshd,bthd->bhst", q, k) / jnp.sqrt(hd).astype(x.dtype)
+            p = jax.nn.softmax(sc, -1)
+            o = jnp.einsum("bhst,bthd->bshd", p, v).reshape(1, s, heads * hd)
+            return o @ wo
+
+        def mlp(x, w1, w2):
+            return jax.nn.gelu(x @ w1) @ w2
+
+        def con(x):
+            mu = x.mean(-1, keepdims=True)
+            var = ((x - mu) ** 2).mean(-1, keepdims=True)
+            return x + (x - mu) * jax.lax.rsqrt(var + 1e-5)
+
+        return {
+            "mha": self._time(mha, x, wqkv, wo),
+            "mlp": self._time(mlp, x, w1, w2),
+            "con": self._time(con, x),
+        }
+
+    def capacity(self) -> float:
+        t = self.measure_blocks(self.cfg.num_heads, self.cfg.d_ff)
+        return 1.0 / (t["mha"] + t["mlp"])

@@ -1,0 +1,215 @@
+"""Edge-cluster simulator: reproduces the paper's evaluation (Tables IV/V,
+Figs. 8-11) from the calibrated cost model + the faithful planner.
+
+Schedules simulated:
+  local           single device
+  megatron (M-LM) TP, AllReduce x2/layer, connective redundant, equal split
+  sp              sequence parallelism, weights replicated, 2 AllGathers/MHA
+  galaxy          HMP + heterogeneity/memory-aware planning, sync collectives
+  galaxy_overlap  galaxy + tile-based ring overlap (§III-D)
+
+The ring-overlap saving per collective⊗GEMM pair is (D-1)·min(c, g) where c
+is the per-hop transfer time and g the per-tile GEMM time — the schedule of
+Figs. 6/7 (D GEMM tiles overlapping D-1 hops).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core import costmodel, planner
+from repro.core.costmodel import DeviceSpec, LinkSpec
+from repro.core.profiler import AnalyticProfiler
+
+OOM = float("inf")
+
+# Tiling a GEMM into D ring stages lowers per-GEMM efficiency (smaller
+# matrices; paper §IV-E observes this "potential underutilization ... due to
+# matrix tiling").  ~5% per extra ring stage.
+TILE_OVERHEAD = 0.05
+
+
+@dataclasses.dataclass
+class SimResult:
+    latency: float                    # end-to-end seconds (inf = OOM)
+    per_device_mem: Optional[np.ndarray] = None
+    breakdown: Optional[Dict[str, float]] = None
+
+    @property
+    def oom(self) -> bool:
+        return not np.isfinite(self.latency)
+
+
+def _embed_bytes(cfg: ModelConfig) -> float:
+    return cfg.vocab_size * cfg.d_model * costmodel.BYTES_FP16
+
+
+def _overlap_layer_time(compute_total: float, comm_total: float, d: int) -> float:
+    """Global overlap model for one layer: the D-1 ring hops of all four
+    collective⊗GEMM pairs (§III-D) overlap with whatever compute the layer
+    has in flight (tile GEMMs, attention core, connective); only the excess
+    communication is exposed.  Tiled GEMMs pay a small efficiency penalty."""
+    compute_total = compute_total * (1.0 + TILE_OVERHEAD * (d - 1))
+    exposed = max(0.0, comm_total - compute_total)
+    return compute_total + exposed
+
+
+def simulate(
+    cfg: ModelConfig,
+    devices: Sequence[DeviceSpec],
+    link: LinkSpec,
+    seq: int,
+    schedule: str,
+) -> SimResult:
+    d_n = len(devices)
+    prof = AnalyticProfiler(cfg, seq)
+    p = prof.prof
+    l = cfg.num_layers
+    act = p["act_bytes"]
+    flops = np.array([dev.flops for dev in devices])
+    bws = np.array([dev.mem_bw for dev in devices])
+    budgets = np.array([dev.memory_budget for dev in devices])
+
+    if schedule == "local":
+        dev = devices[0]
+        mem = costmodel.model_memory_bytes(cfg)
+        if mem > dev.memory_budget:
+            return SimResult(OOM, np.array([mem]))
+        t = l * (
+            (p["mha_flops"] + p["mlp_flops"]) / dev.flops
+            + p["con_bytes"] / dev.mem_bw
+        )
+        return SimResult(t, np.array([mem]))
+
+    if schedule == "megatron":
+        # Megatron shards the embedding vocab-parallel as well
+        mem = l * (p["m_att"] + p["m_mlp"]) / d_n + _embed_bytes(cfg) / d_n
+        per_dev = np.full(d_n, mem)
+        if np.any(per_dev > budgets):
+            return SimResult(OOM, per_dev)
+        t_mha = np.max(p["mha_flops"] / d_n / flops)
+        t_mlp = np.max(p["mlp_flops"] / d_n / flops)
+        t_con = np.max(p["con_bytes"] / bws)  # redundant on every device
+        t_comm = 2 * costmodel.t_allreduce(act, d_n, link)
+        t = l * (t_mha + t_mlp + t_con + t_comm)
+        return SimResult(t, per_dev, {"comm": l * t_comm, "con": l * t_con})
+
+    if schedule == "sp":
+        mem = costmodel.model_memory_bytes(cfg)
+        per_dev = np.full(d_n, mem)
+        if np.any(per_dev > budgets):
+            return SimResult(OOM, per_dev)
+        t_comp = np.max((p["mha_flops"] + p["mlp_flops"]) / d_n / flops)
+        t_con = np.max(p["con_bytes"] / d_n / bws)
+        t_comm = 2 * costmodel.t_allgather(act, d_n, link)  # gather K and V
+        t = l * (t_comp + t_con + t_comm)
+        return SimResult(t, per_dev, {"comm": l * t_comm, "con": l * t_con})
+
+    if schedule in ("galaxy", "galaxy_overlap"):
+        dev_profiles = prof.device_profiles(devices)
+        model_profile = prof.model_profile()
+        pl = planner.plan(model_profile, dev_profiles)
+        per_dev = pl.memory_per_device(model_profile) + _embed_bytes(cfg) / d_n
+        if not pl.feasible or np.any(per_dev > budgets):
+            return SimResult(OOM, per_dev)
+
+        a_frac = pl.mha / pl.mha.sum()
+        b_frac = pl.mlp / pl.mlp.sum()
+        # split MHA compute: QKV+WO GEMMs (overlappable) vs attention core
+        hd, h, kv, dm = cfg.head_dim, cfg.num_heads, cfg.num_kv_heads, cfg.d_model
+        qkv_flops = 2 * seq * dm * (h * hd + 2 * kv * hd)
+        wo_flops = 2 * seq * (h * hd) * dm
+        attn_core = p["mha_flops"] - qkv_flops - wo_flops
+        gate = 3 if cfg.activation in ("swiglu", "geglu") else 2
+        mlp1_flops = (gate - 1) * 2 * seq * dm * cfg.d_ff
+        mlp2_flops = 2 * seq * dm * cfg.d_ff
+
+        t_attn_core = np.max(a_frac * attn_core / flops)
+        t_con = np.max(p["con_bytes"] / d_n / bws)
+
+        c_step = (act / d_n) / link.bandwidth + link.latency
+        pairs = [
+            (qkv_flops, a_frac),   # AllGather ⊗ QKV GEMM
+            (wo_flops, a_frac),    # WO GEMM ⊗ ReduceScatter
+            (mlp1_flops, b_frac),  # AllGather ⊗ GEMM1
+            (mlp2_flops, b_frac),  # GEMM2 ⊗ ReduceScatter
+        ]
+        t_gemms = sum(np.max(fl * fr / flops) for fl, fr in pairs)
+        if schedule == "galaxy":
+            t_comm = 2 * (
+                costmodel.t_reducescatter(act, d_n, link)
+                + costmodel.t_allgather(act, d_n, link)
+            )
+            t_layer = t_attn_core + t_gemms + t_con + t_comm
+        else:
+            comm_total = 4 * (d_n - 1) * c_step  # hops of all 4 ring pairs
+            t_layer = _overlap_layer_time(
+                t_attn_core + t_gemms + t_con, comm_total, d_n
+            )
+        return SimResult(
+            l * t_layer,
+            per_dev,
+            {"con": l * t_con, "attn_core": l * t_attn_core},
+        )
+
+    raise ValueError(schedule)
+
+
+def speedup_table(
+    cfg: ModelConfig,
+    devices: Sequence[DeviceSpec],
+    link: LinkSpec,
+    seq: int,
+    baselines: Sequence[str] = ("megatron", "sp"),
+    galaxy: str = "galaxy_overlap",
+) -> Dict[str, object]:
+    g = simulate(cfg, devices, link, seq, galaxy)
+    out: Dict[str, object] = {"galaxy_s": g.latency}
+    for b in baselines:
+        r = simulate(cfg, devices, link, seq, b)
+        if g.oom:
+            out[b] = "GALAXY-OOM"
+        elif r.oom:
+            out[b] = "OOM"
+        else:
+            out[b] = r.latency / g.latency
+    return out
+
+
+def weak_scaling(cfg: ModelConfig, device: DeviceSpec, link: LinkSpec,
+                 seq_per_device: int, max_devices: int = 4) -> List[float]:
+    """Fig. 10: FLOPS scaling efficiency vs linear, single layer."""
+    import dataclasses as dc
+
+    cfg1 = dc.replace(cfg, num_layers=1)
+    effs = []
+    base = None
+    for d_n in range(1, max_devices + 1):
+        seq = seq_per_device * d_n
+        devices = [device] * d_n
+        sched = "galaxy_overlap" if d_n > 1 else "local"
+        r = simulate(cfg1, devices, link, seq, sched)
+        p = costmodel.layer_profile(cfg1, seq)
+        flops_rate = (p["mha_flops"] + p["mlp_flops"]) / r.latency
+        if base is None:
+            base = flops_rate
+        effs.append(flops_rate / (base * d_n))
+    return effs
+
+
+def strong_scaling(cfg: ModelConfig, device: DeviceSpec, link: LinkSpec,
+                   seq: int, max_devices: int = 4) -> List[float]:
+    """Fig. 11: per-layer latency speedup vs local inference."""
+    import dataclasses as dc
+
+    cfg1 = dc.replace(cfg, num_layers=1)
+    base = simulate(cfg1, [device], link, seq, "local").latency
+    out = []
+    for d_n in range(1, max_devices + 1):
+        sched = "galaxy_overlap" if d_n > 1 else "local"
+        r = simulate(cfg1, [device] * d_n, link, seq, sched)
+        out.append(base / r.latency)
+    return out

@@ -1,0 +1,4 @@
+from repro.data.pipeline import DataConfig, LMDataPipeline
+from repro.data.tokenizer import ByteTokenizer
+
+__all__ = ["DataConfig", "LMDataPipeline", "ByteTokenizer"]

@@ -1,0 +1,4 @@
+"""Pallas TPU kernels for the perf-critical compute the paper optimizes:
+the overlap tile GEMM (§III-D), blocked attention, and the fused SP
+connective block.  Validated in interpret mode against kernels/ref.py."""
+from repro.kernels import ops, ref  # noqa: F401

@@ -1,0 +1,110 @@
+"""Blocked (flash) attention Pallas kernel for TPU.
+
+Design for the TPU memory hierarchy (DESIGN.md §2): Q/K/V blocks are staged
+HBM->VMEM by BlockSpecs with MXU-aligned tiles (block_q x head_dim and
+block_k x head_dim, multiples of 128 where shapes allow); the kernel keeps
+the running max / normalizer / accumulator in VMEM scratch across the
+sequential k-block grid axis (TPU grids iterate the last axis innermost),
+which is the standard online-softmax accumulation pattern.
+
+Supports causal and sliding-window masks (RecurrentGemma local attention,
+and the long_500k sliding-window variant) and GQA via the kv-head index
+map (q head h reads kv head h // group).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+            causal: bool, window: int, sk: int, sq: int, block_q: int,
+            block_k: int, scale: float):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0].astype(jnp.float32)  # (block_q, hd)
+    k = k_ref[0, 0].astype(jnp.float32)  # (block_k, hd)
+    v = v_ref[0, 0].astype(jnp.float32)
+
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+
+    # positions (queries right-aligned against the key sequence)
+    q_pos = qi * block_q + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0) + (sk - sq)
+    k_pos = ki * block_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    mask = jnp.ones_like(s, dtype=jnp.bool_)
+    if causal:
+        mask &= k_pos <= q_pos
+    if window > 0:
+        mask &= k_pos > q_pos - window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_scr[...]
+    l_prev = l_scr[...]
+    m_cur = jnp.max(s, axis=1)
+    m_new = jnp.maximum(m_prev, m_cur)
+    p = jnp.exp(s - m_new[:, None])
+    # fully-masked rows: keep accumulator stable
+    p = jnp.where(jnp.isfinite(s), p, 0.0)
+    alpha = jnp.where(m_prev > NEG_INF / 2, jnp.exp(m_prev - m_new), 0.0)
+    l_new = alpha * l_prev + jnp.sum(p, axis=1)
+    acc_scr[...] = acc_scr[...] * alpha[:, None] + jnp.dot(
+        p, v, preferred_element_type=jnp.float32
+    )
+    m_scr[...] = m_new
+    l_scr[...] = l_new
+
+    @pl.when(ki == nk - 1)
+    def _finish():
+        denom = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0, 0] = (acc_scr[...] / denom[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention(
+    q, k, v, *, causal: bool = True, window: int = 0,
+    block_q: int = 128, block_k: int = 128, interpret: bool = False,
+):
+    """q: (B,H,Sq,hd); k,v: (B,Hkv,Sk,hd). Returns (B,H,Sq,hd)."""
+    b, h, sq, hd = q.shape
+    hkv, sk = k.shape[1], k.shape[2]
+    g = h // hkv
+    block_q = min(block_q, sq)
+    block_k = min(block_k, sk)
+    assert sq % block_q == 0 and sk % block_k == 0
+    scale = 1.0 / (hd ** 0.5)
+
+    grid = (b, h, sq // block_q, sk // block_k)
+    kernel = functools.partial(
+        _kernel, causal=causal, window=window, sk=sk, sq=sq,
+        block_q=block_q, block_k=block_k, scale=scale,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, hd), lambda bi, hi, qi, ki: (bi, hi, qi, 0)),
+            pl.BlockSpec((1, 1, block_k, hd), lambda bi, hi, qi, ki: (bi, hi // g, ki, 0)),
+            pl.BlockSpec((1, 1, block_k, hd), lambda bi, hi, qi, ki: (bi, hi // g, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, hd), lambda bi, hi, qi, ki: (bi, hi, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, sq, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,54 @@
+"""Public jit'd wrappers for the Pallas kernels.
+
+On this CPU container the kernels run with ``interpret=True`` (the kernel
+body executes in Python via the Pallas interpreter — functionally identical
+to the TPU lowering).  On a real TPU backend ``interpret`` defaults to
+False and the same calls compile to Mosaic.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.flash_attention import flash_attention as _flash
+from repro.kernels.fused_connective import fused_connective as _connective
+from repro.kernels.tiled_gemm import tiled_gemm as _gemm
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "block_q", "block_k"))
+def flash_attention(q, k, v, *, causal=True, window=0, block_q=128, block_k=128):
+    return _flash(
+        q, k, v, causal=causal, window=window, block_q=block_q,
+        block_k=block_k, interpret=_default_interpret(),
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_n", "block_k"))
+def tiled_gemm(x, w, *, block_m=256, block_n=256, block_k=512):
+    return _gemm(
+        x, w, block_m=block_m, block_n=block_n, block_k=block_k,
+        interpret=_default_interpret(),
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("rate", "eps", "block_s"))
+def fused_connective(x, res, keep_mask, scale, bias, *, rate=0.0, eps=1e-5, block_s=256):
+    return _connective(
+        x, res, keep_mask, scale, bias, rate=rate, eps=eps, block_s=block_s,
+        interpret=_default_interpret(),
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("block_s", "block_w"))
+def rglru_scan(a, b, h0, *, block_s=256, block_w=256):
+    from repro.kernels.rglru_scan import rglru_scan_kernel
+
+    return rglru_scan_kernel(
+        a, b, h0, block_s=block_s, block_w=block_w,
+        interpret=_default_interpret(),
+    )

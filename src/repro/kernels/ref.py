@@ -1,0 +1,63 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True, window: int = 0):
+    """q: (B,H,Sq,hd); k,v: (B,Hkv,Sk,hd) with H % Hkv == 0. fp32 softmax."""
+    b, h, sq, hd = q.shape
+    hkv = k.shape[1]
+    g = h // hkv
+    qg = q.reshape(b, hkv, g, sq, hd)
+    scores = jnp.einsum("bkgsh,bkth->bkgst", qg, k).astype(jnp.float32)
+    scores = scores / jnp.sqrt(hd)
+    sk = k.shape[2]
+    q_pos = jnp.arange(sq)[:, None] + (sk - sq)  # right-aligned positions
+    k_pos = jnp.arange(sk)[None, :]
+    mask = jnp.ones((sq, sk), bool)
+    if causal:
+        mask &= k_pos <= q_pos
+    if window > 0:
+        mask &= k_pos > q_pos - window
+    scores = jnp.where(mask, scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bkgst,bkth->bkgsh", p, v)
+    return out.reshape(b, h, sq, hd)
+
+
+def tiled_gemm_ref(x, w):
+    """x: (M,K) @ w: (K,N) with fp32 accumulation."""
+    return jnp.dot(x, w, preferred_element_type=jnp.float32).astype(x.dtype)
+
+
+def fused_connective_ref(x, res, keep_mask, scale, bias, *, rate: float, eps: float = 1e-5):
+    """The Galaxy SP connective block: dropout -> residual add -> layernorm.
+    x, res: (S, d); keep_mask: (S, d) float 0/1 (ignored when rate == 0)."""
+    if rate > 0:
+        x = x * keep_mask / (1.0 - rate)
+    y = (x + res).astype(jnp.float32)
+    mu = y.mean(-1, keepdims=True)
+    var = ((y - mu) ** 2).mean(-1, keepdims=True)
+    out = (y - mu) * jax.lax.rsqrt(var + eps) * scale + bias
+    return out.astype(x.dtype)
+
+
+def rglru_scan_ref(a, b, h0):
+    """Sequential oracle of h_t = a_t ⊙ h_{t-1} + b_t. a,b: (B,S,w); h0: (B,w)."""
+    import jax
+
+    def step(h, ab):
+        at, bt = ab
+        h = at * h + bt
+        return h, h
+
+    h_last, hs = jax.lax.scan(
+        step, h0.astype(jnp.float32),
+        (a.transpose(1, 0, 2).astype(jnp.float32),
+         b.transpose(1, 0, 2).astype(jnp.float32)),
+    )
+    return hs.transpose(1, 0, 2).astype(a.dtype), h_last.astype(a.dtype)

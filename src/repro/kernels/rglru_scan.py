@@ -1,0 +1,85 @@
+"""RG-LRU sequence-scan Pallas kernel (RecurrentGemma's recurrent hot-spot).
+
+h_t = a_t ⊙ h_{t-1} + b_t over the sequence, per (batch, width-tile).  The
+XLA associative_scan builds a log-depth tree that materializes O(log S)
+full (B,S,w) intermediates in HBM; this kernel streams (block_s x block_w)
+tiles through VMEM sequentially per grid row, carrying h in a VMEM scratch
+— one HBM read of (a,b) and one write of h, O(1) intermediates.  The
+diagonal recurrence has no cross-width dependencies, so the width grid
+dimension is embarrassingly parallel (and model-axis shardable).
+
+Trade-off vs associative_scan (documented for the §Perf log): sequential
+in S per core but ~log2(S) x less HBM traffic; on TPU the recurrence is
+memory-bound so the traffic term dominates.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(a_ref, b_ref, h0_ref, o_ref, hlast_ref, carry):
+    si = pl.program_id(1)
+    ns = pl.num_programs(1)
+
+    @pl.when(si == 0)
+    def _init():
+        carry[...] = h0_ref[0].astype(jnp.float32)
+
+    a = a_ref[0].astype(jnp.float32)  # (block_s, block_w)
+    b = b_ref[0].astype(jnp.float32)
+
+    # sequential recurrence within the tile via scan over rows
+    def step(h, ab):
+        at, bt = ab
+        h = at * h + bt
+        return h, h
+
+    h_last, hs = jax.lax.scan(step, carry[...], (a, b))
+    o_ref[0] = hs.astype(o_ref.dtype)
+    carry[...] = h_last
+
+    @pl.when(si == ns - 1)
+    def _finish():
+        hlast_ref[0] = h_last.astype(hlast_ref.dtype)
+
+
+def rglru_scan_kernel(
+    a, b, h0, *, block_s: int = 256, block_w: int = 256, interpret: bool = False,
+):
+    """a, b: (B, S, w); h0: (B, w).  Returns (h_seq (B,S,w), h_last (B,w))."""
+    bsz, s, w = a.shape
+    block_s = min(block_s, s)
+    block_w = min(block_w, w)
+    assert s % block_s == 0 and w % block_w == 0
+
+    grid = (bsz * (w // block_w), s // block_s)
+    nw = w // block_w
+
+    def idx_sw(i, si):
+        return (i // nw, si, i % nw)
+
+    def idx_w(i, si):
+        return (i // nw, i % nw)
+
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_s, block_w), idx_sw),
+            pl.BlockSpec((1, block_s, block_w), idx_sw),
+            pl.BlockSpec((1, block_w), idx_w),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, block_s, block_w), idx_sw),
+            pl.BlockSpec((1, block_w), idx_w),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bsz, s, w), a.dtype),
+            jax.ShapeDtypeStruct((bsz, w), a.dtype),
+        ],
+        scratch_shapes=[pltpu.VMEM((block_w,), jnp.float32)],
+        interpret=interpret,
+    )(a, b, h0)

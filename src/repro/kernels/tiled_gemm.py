@@ -1,0 +1,62 @@
+"""MXU-aligned tiled GEMM Pallas kernel.
+
+This is the compute primitive of the paper's tile-based overlap (§III-D):
+each ring step's per-tile GEMM is exactly one of these calls on a sequence
+tile.  BlockSpecs stage (block_m x block_k) / (block_k x block_n) operand
+tiles into VMEM with a fp32 VMEM accumulator; the k grid axis is innermost
+so the accumulator lives across the contraction.  128-multiples align the
+MXU's 128x128 systolic array.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, w_ref, o_ref, acc_ref):
+    ki = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(ki == nk - 1)
+    def _finish():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def tiled_gemm(
+    x, w, *, block_m: int = 256, block_n: int = 256, block_k: int = 512,
+    interpret: bool = False,
+):
+    """x: (M, K) @ w: (K, N) -> (M, N), fp32 accumulation in VMEM."""
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2
+    block_m = min(block_m, m)
+    block_n = min(block_n, n)
+    block_k = min(block_k, k)
+    assert m % block_m == 0 and n % block_n == 0 and k % block_k == 0
+
+    grid = (m // block_m, n // block_n, k // block_k)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, block_k), lambda mi, ni, ki: (mi, ki)),
+            pl.BlockSpec((block_k, block_n), lambda mi, ni, ki: (ki, ni)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda mi, ni, ki: (mi, ni)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        scratch_shapes=[pltpu.VMEM((block_m, block_n), jnp.float32)],
+        interpret=interpret,
+    )(x, w)

@@ -1,0 +1,4 @@
+from repro.launch.mesh import make_production_mesh, make_test_mesh
+from repro.launch.shapes import SHAPES, input_specs, shape_config
+
+__all__ = ["make_production_mesh", "make_test_mesh", "SHAPES", "input_specs", "shape_config"]

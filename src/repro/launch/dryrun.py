@@ -1,0 +1,282 @@
+import os
+os.environ["XLA_FLAGS"] = os.environ.get("REPRO_DRYRUN_XLA_FLAGS",
+                                         "--xla_force_host_platform_device_count=512")
+# ^ MUST precede every other import: jax locks the device count on first init.
+
+"""Multi-pod dry-run: .lower().compile() every (arch x input-shape x mesh).
+
+For each combination this builds the sharded step function (train_step /
+prefill_step / serve_step) from abstract inputs (ShapeDtypeStruct — no
+allocation), lowers and compiles it against the production mesh, and
+records memory_analysis + cost_analysis + the collective schedule for the
+roofline (EXPERIMENTS.md §Dry-run / §Roofline).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen1.5-0.5b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] [--hmp-mode tp_only]
+Results append to experiments/dryrun/<arch>__<shape>__<mesh>.json.
+"""
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ASSIGNED_ARCHS, get_config
+from repro.configs.base import ModelConfig
+from repro.launch.mesh import make_production_mesh
+from repro.launch.shapes import SHAPES, input_specs, shape_config
+from repro.models.params import abstract_params
+from repro.models.sharding import Rules, axis_rules, make_rules
+from repro.models.transformer import apply_model
+from repro.roofline.analysis import Roofline, collective_bytes, model_flops
+from repro.training.optimizer import AdamW, cosine_schedule
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..", "experiments", "dryrun")
+
+
+def _mode_of(shape: str) -> str:
+    return SHAPES[shape]["mode"]
+
+
+def build_step(cfg: ModelConfig, shape: str, rules: Rules, unroll: bool = False):
+    """Returns (fn, abstract_args) for the step this shape exercises."""
+    mode = _mode_of(shape)
+    specs = input_specs(cfg, shape, rules)
+    aparams = abstract_params(cfg, rules)
+
+    if mode == "train":
+        opt = AdamW(cosine_schedule(3e-4, 100, 10000))
+        mu = jax.tree.map(
+            lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32, sharding=p.sharding),
+            aparams,
+        )
+        astate = (jax.ShapeDtypeStruct((), jnp.int32), mu, mu)
+        from repro.training.train_loop import loss_fn
+
+        def train_step(params, opt_state, batch):
+            from repro.training.optimizer import AdamWState
+
+            with axis_rules(rules):
+                (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+                    params, batch, cfg, None, unroll
+                )
+                params, new_state, _ = opt.update(
+                    grads, AdamWState(*opt_state), params
+                )
+            return params, tuple(new_state), loss
+
+        return train_step, (aparams, astate, specs)
+
+    if mode == "prefill":
+        def prefill_step(params, batch):
+            with axis_rules(rules):
+                logits, cache, _ = apply_model(
+                    params, cfg, mode="prefill", cache=None, unroll=unroll, **batch
+                )
+            return logits[:, -1], cache
+
+        return prefill_step, (aparams, specs)
+
+    # decode / decode_long -> serve_step: ONE new token against the cache
+    def serve_step(params, batch):
+        cache = batch["cache"]
+        index = batch["cache_index"]
+        kwargs = {k: v for k, v in batch.items() if k not in ("cache", "cache_index")}
+        with axis_rules(rules):
+            logits, new_cache, _ = apply_model(
+                params, cfg, mode="decode", cache=cache, cache_index=index,
+                unroll=unroll, **kwargs
+            )
+        return logits[:, -1], new_cache
+
+    return serve_step, (aparams, specs)
+
+
+def _xlstm_scan_correction(cfg: ModelConfig, shape: str, chips: int) -> float:
+    """Analytic per-chip FLOPs for m/sLSTM *time-scan* inner recurrences,
+    which sit in while loops XLA's cost_analysis counts once.  The q/k/v and
+    up/down projections run outside the time scan and are counted normally.
+    Training roughly triples the recurrence work (fwd + bwd)."""
+    kinds = cfg.layer_kinds()
+    n_m = sum(1 for k in kinds if k == "mlstm")
+    n_s = sum(1 for k in kinds if k == "slstm")
+    if n_m + n_s == 0:
+        return 0.0
+    info = SHAPES[shape]
+    tokens = info["batch"] * (info["seq"] if info["mode"] in ("train", "prefill") else 1)
+    di = int(cfg.d_model * cfg.proj_factor)
+    nh = cfg.num_heads
+    dh = di // nh
+    per_tok_m = 8.0 * nh * dh * dh      # C update + C·q + n ops
+    per_tok_s = 8.0 * nh * dh * dh + 40.0 * nh * dh  # recurrent matmul + gates
+    total = tokens * (n_m * per_tok_m + n_s * per_tok_s)
+    if info["mode"] == "train":
+        total *= 3.0
+    return total / chips
+
+
+def _lower_compile(cfg, shape, rules, mesh, unroll: bool = False):
+    fn, args = build_step(cfg, shape, rules, unroll=unroll)
+    with mesh:
+        lowered = jax.jit(fn).lower(*args)
+        compiled = lowered.compile()
+    return lowered, compiled
+
+
+def _cost_tuple(compiled):
+    cost = compiled.cost_analysis() or {}
+    hlo = compiled.as_text()
+    coll = collective_bytes(hlo)
+    return (
+        float(cost.get("flops", 0.0)),
+        float(cost.get("bytes accessed", 0.0)),
+        coll,
+    )
+
+
+def run_one(arch: str, shape: str, *, multi_pod: bool = False,
+            hmp_sequence_parallel: bool = True, save: bool = True,
+            verbose: bool = True, variant: str = "",
+            cfg_overrides: Optional[dict] = None,
+            rules_overrides: Optional[dict] = None) -> dict:
+    """``variant`` tags the output file; ``cfg_overrides`` are
+    dataclasses.replace fields (e.g. attn_chunk=1024, param_dtype=...);
+    ``rules_overrides`` are extra make_rules kwargs (§Perf hillclimbs)."""
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    mesh_name = "x".join(str(s) for s in mesh.devices.shape)
+    chips = mesh.devices.size
+
+    base_cfg = get_config(arch)
+    cfg = shape_config(base_cfg, shape)
+    if cfg_overrides:
+        cfg = dataclasses.replace(cfg, **cfg_overrides)
+    info = SHAPES[shape]
+    rules = make_rules(
+        mesh, info["mode"], multi_pod=multi_pod, batch_size=info["batch"],
+        hmp_sequence_parallel=hmp_sequence_parallel,
+        **(rules_overrides or {}),
+    )
+
+    # --- full-depth compile: THE multi-pod proof + memory analysis ---------
+    t0 = time.time()
+    fn, args = build_step(cfg, shape, rules)
+    with mesh:
+        lowered = jax.jit(fn).lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+    t_compile = time.time() - t0 - t_lower
+    mem = compiled.memory_analysis()
+
+    # --- roofline terms: XLA's cost_analysis counts a scanned layer-group
+    # body ONCE, not x trip-count.  Measure per-group costs from UNROLLED
+    # G=1 and G=2 compiles: total = base(G=1) + delta_per_group*(groups-1).
+    plen = len(cfg.block_pattern)
+    tail = len(cfg.tail_pattern)
+    g_full = cfg.num_groups
+    cfg1 = dataclasses.replace(cfg, num_layers=1 * plen + tail)
+    cfg2 = dataclasses.replace(cfg, num_layers=2 * plen + tail)
+    _, c1 = _lower_compile(cfg1, shape, rules, mesh, unroll=True)
+    f1, b1, coll1 = _cost_tuple(c1)
+    _, c2 = _lower_compile(cfg2, shape, rules, mesh, unroll=True)
+    f2, b2, coll2 = _cost_tuple(c2)
+    n_extra = g_full - 1
+    hlo_flops = f1 + (f2 - f1) * n_extra
+    hlo_bytes = b1 + (b2 - b1) * n_extra
+    coll = {
+        k: coll1.get(k, 0.0) + (coll2.get(k, 0.0) - coll1.get(k, 0.0)) * n_extra
+        for k in set(coll1) | set(coll2)
+    }
+    # inner *time* scans (m/sLSTM) still sit in while loops: analytic add-in
+    hlo_flops += _xlstm_scan_correction(cfg, shape, chips)
+
+    mf = model_flops(cfg, info, training=info["mode"] == "train")
+    rl = Roofline(
+        arch=arch, shape=shape, mesh=mesh_name, chips=chips,
+        hlo_flops=hlo_flops,
+        hlo_bytes=hlo_bytes,
+        coll_bytes=coll,
+        model_flops=mf,
+        peak_mem_bytes=getattr(mem, "temp_size_in_bytes", None),
+        dtype_factor=0.5 if cfg.dtype == "bfloat16" else 1.0,
+    )
+    record = rl.to_dict()
+    record.update(
+        hmp_sequence_parallel=hmp_sequence_parallel,
+        lower_s=round(t_lower, 1),
+        compile_s=round(t_compile, 1),
+        argument_bytes=getattr(mem, "argument_size_in_bytes", None),
+        output_bytes=getattr(mem, "output_size_in_bytes", None),
+        temp_bytes=getattr(mem, "temp_size_in_bytes", None),
+        generated_code_bytes=getattr(mem, "generated_code_size_in_bytes", None),
+    )
+    if save:
+        os.makedirs(OUT_DIR, exist_ok=True)
+        suffix = "" if hmp_sequence_parallel else "__tp_only"
+        if variant:
+            suffix += f"__{variant}"
+        path = os.path.join(OUT_DIR, f"{arch}__{shape}__{mesh_name}{suffix}.json")
+        with open(path, "w") as f:
+            json.dump(record, f, indent=2)
+    if verbose:
+        print(
+            f"[dryrun] {arch:24s} {shape:12s} mesh={mesh_name:9s} OK "
+            f"flops/chip={record['hlo_flops_per_chip']:.3e} "
+            f"coll/chip={coll.get('total', 0)/1e6:.1f}MB "
+            f"bottleneck={record['bottleneck']} "
+            f"(lower {t_lower:.0f}s compile {t_compile:.0f}s)",
+            flush=True,
+        )
+        if mem is not None:
+            print(f"  memory_analysis: {mem}", flush=True)
+    return record
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, choices=list(ASSIGNED_ARCHS) + [None])
+    ap.add_argument("--shape", default=None, choices=list(SHAPES) + [None])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--tp-only", action="store_true",
+                    help="disable HMP sequence parallelism (Megatron-TP baseline)")
+    ap.add_argument("--continue-on-error", action="store_true")
+    ap.add_argument("--resume", action="store_true",
+                    help="skip combos whose result JSON already exists")
+    args = ap.parse_args()
+
+    archs = list(ASSIGNED_ARCHS) if args.all or args.arch is None else [args.arch]
+    shapes = list(SHAPES) if args.all or args.shape is None else [args.shape]
+    # smallest archs first: early results bank fast, big compiles last
+    archs.sort(key=lambda a: get_config(a).param_count())
+
+    mesh_name = "2x16x16" if args.multi_pod else "16x16"
+    failures = []
+    for arch in archs:
+        for shape in shapes:
+            suffix = "__tp_only" if args.tp_only else ""
+            path = os.path.join(OUT_DIR, f"{arch}__{shape}__{mesh_name}{suffix}.json")
+            if args.resume and os.path.exists(path):
+                print(f"[dryrun] {arch} {shape} {mesh_name} cached, skipping", flush=True)
+                continue
+            try:
+                run_one(arch, shape, multi_pod=args.multi_pod,
+                        hmp_sequence_parallel=not args.tp_only)
+            except Exception as e:  # noqa: BLE001
+                failures.append((arch, shape, repr(e)))
+                print(f"[dryrun] {arch} {shape} FAILED: {e}", flush=True)
+                if not args.continue_on_error:
+                    traceback.print_exc()
+                    raise
+    if failures:
+        print(f"{len(failures)} failures:", *failures, sep="\n  ")
+        raise SystemExit(1)
+    print("all dry-runs passed")
+
+
+if __name__ == "__main__":
+    main()

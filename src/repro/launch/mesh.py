@@ -1,0 +1,27 @@
+"""Production meshes.  Defined as FUNCTIONS so importing this module never
+touches jax device state (jax locks the device count on first backend init).
+
+Single pod:  16 x 16 = 256 chips, axes (data, model)
+Multi-pod:   2 x 16 x 16 = 512 chips, axes (pod, data, model)
+
+The "model" axis is the Galaxy HMP axis (TP heads/ffn/experts + SP sequence);
+"data" carries batch / FSDP weight shards / long-context cache shards; "pod"
+is the cross-pod (DCN-class) data axis.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_test_mesh(model: int = 2, data: int = 1):
+    """Small mesh for CPU multi-device tests (subprocess with forced device
+    count)."""
+    axes = ("data", "model")
+    return jax.make_mesh((data, model), axes, axis_types=(AxisType.Auto,) * 2)

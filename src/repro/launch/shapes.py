@@ -1,0 +1,85 @@
+"""Assigned input shapes and their ShapeDtypeStruct stand-ins.
+
+  train_4k       seq_len=  4,096  global_batch= 256  (training)
+  prefill_32k    seq_len= 32,768  global_batch=  32  (inference-prefill)
+  decode_32k     seq_len= 32,768  global_batch= 128  (inference-decode)
+  long_500k      seq_len=524,288  global_batch=   1  (long-context-decode)
+
+Decode shapes lower ``serve_step`` (ONE token against a seq_len cache).
+long_500k substitutes the sliding-window attention variant for otherwise-
+quadratic archs (DESIGN.md §4) — the cache is then window-sized.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.sharding import Rules
+from repro.serving.kvcache import make_cache
+
+SHAPES = {
+    "train_4k": dict(seq=4096, batch=256, mode="train"),
+    "prefill_32k": dict(seq=32768, batch=32, mode="prefill"),
+    "decode_32k": dict(seq=32768, batch=128, mode="decode"),
+    "long_500k": dict(seq=524288, batch=1, mode="decode_long"),
+}
+
+
+def shape_config(cfg: ModelConfig, shape: str) -> ModelConfig:
+    """Per-shape config variant: long_500k swaps in sliding-window attention
+    for archs whose native attention is quadratic."""
+    if shape == "long_500k" and not cfg.sub_quadratic:
+        return dataclasses.replace(cfg, window=cfg.long_context_window)
+    return cfg
+
+
+def _sds(shape, dtype, rules: Optional[Rules], axes):
+    sharding = None
+    if rules is not None and rules.mesh is not None:
+        sharding = jax.sharding.NamedSharding(rules.mesh, rules.spec(axes, shape=shape))
+    return jax.ShapeDtypeStruct(shape, jnp.dtype(dtype), sharding=sharding)
+
+
+def input_specs(cfg: ModelConfig, shape: str, rules: Optional[Rules] = None) -> Dict:
+    """ShapeDtypeStruct stand-ins for every model input of this shape —
+    weak-type-correct, shardable, no device allocation."""
+    info = SHAPES[shape]
+    seq, batch, mode = info["seq"], info["batch"], info["mode"]
+    cfg = shape_config(cfg, shape)
+    specs: Dict = {}
+
+    if mode == "train":
+        if cfg.input_mode == "token":
+            specs["tokens"] = _sds((batch, seq), "int32", rules, ("batch", "seq"))
+            specs["labels"] = _sds((batch, seq), "int32", rules, ("batch", "seq"))
+        else:
+            specs["embeds"] = _sds((batch, seq, cfg.d_model), cfg.dtype, rules,
+                                   ("batch", "seq", "embed"))
+            lab_axes = ("batch", "seq") if cfg.num_codebooks <= 1 else ("batch", "seq", None)
+            lab_shape = (batch, seq) if cfg.num_codebooks <= 1 else (batch, seq, cfg.num_codebooks)
+            specs["labels"] = _sds(lab_shape, "int32", rules, lab_axes)
+    elif mode == "prefill":
+        if cfg.input_mode == "token":
+            specs["tokens"] = _sds((batch, seq), "int32", rules, ("batch", "seq"))
+        else:
+            specs["embeds"] = _sds((batch, seq, cfg.d_model), cfg.dtype, rules,
+                                   ("batch", "seq", "embed"))
+    else:  # decode / decode_long
+        if cfg.input_mode == "token":
+            specs["tokens"] = _sds((batch, 1), "int32", rules, ("batch", None))
+        else:
+            specs["embeds"] = _sds((batch, 1, cfg.d_model), cfg.dtype, rules,
+                                   ("batch", None, "embed"))
+        specs["cache"] = make_cache(cfg, batch, seq, abstract=True, rules=rules)
+        specs["cache_index"] = jax.ShapeDtypeStruct((), jnp.int32)
+
+    if cfg.num_image_tokens:
+        specs["img_embeds"] = _sds(
+            (batch, cfg.num_image_tokens, cfg.d_model), cfg.dtype, rules,
+            ("batch", "img_seq", "embed"),
+        )
+    return specs

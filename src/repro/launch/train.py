@@ -1,0 +1,78 @@
+"""End-to-end training driver.
+
+Runs real training on this host (CPU: use a reduced config) or, with
+--mesh, the sharded production layout.  Example (the (b) deliverable's
+"train a ~100M model for a few hundred steps" — see examples/train_small.py
+for the canonical invocation):
+
+  PYTHONPATH=src python -m repro.launch.train --arch qwen1.5-0.5b \
+      --reduce --steps 300 --batch 8 --seq 128 --ckpt /tmp/run1
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ASSIGNED_ARCHS, get_config, reduced
+from repro.data import DataConfig, LMDataPipeline
+from repro.models import init_params
+from repro.training import AdamW, cosine_schedule, make_train_step, save_checkpoint
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen1.5-0.5b", choices=ASSIGNED_ARCHS)
+    ap.add_argument("--reduce", action="store_true",
+                    help="train the reduced (smoke-size) variant")
+    ap.add_argument("--d-model", type=int, default=256)
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--warmup", type=int, default=20)
+    ap.add_argument("--ckpt", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=100)
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--text", default=None, help="optional text corpus path")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduce:
+        cfg = reduced(cfg, d_model=args.d_model)
+    print(f"training {cfg.name}: {cfg.num_layers}L d={cfg.d_model} "
+          f"params={cfg.param_count()/1e6:.1f}M")
+
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    opt = AdamW(cosine_schedule(args.lr, args.warmup, args.steps))
+    opt_state = opt.init(params)
+    step_fn = jax.jit(make_train_step(cfg, opt))
+
+    pipe = iter(LMDataPipeline(cfg, DataConfig(
+        batch_size=args.batch, seq_len=args.seq, text_path=args.text)))
+
+    t0 = time.time()
+    tokens_seen = 0
+    for step in range(1, args.steps + 1):
+        batch = {k: jnp.asarray(v) for k, v in next(pipe).items()}
+        params, opt_state, metrics = step_fn(
+            params, opt_state, batch, jax.random.PRNGKey(step))
+        tokens_seen += args.batch * args.seq
+        if step % args.log_every == 0 or step == 1:
+            jax.block_until_ready(metrics["loss"])
+            rate = tokens_seen / (time.time() - t0)
+            print(f"step {step:5d} loss={float(metrics['loss']):.4f} "
+                  f"gnorm={float(metrics['grad_norm']):.3f} "
+                  f"lr={float(metrics['lr']):.2e} tok/s={rate:,.0f}")
+        if args.ckpt and step % args.ckpt_every == 0:
+            save_checkpoint(args.ckpt, step, params, opt_state,
+                            {"arch": cfg.name})
+            print(f"  checkpoint @ {step} -> {args.ckpt}")
+    print(f"done: {args.steps} steps, {tokens_seen:,} tokens, "
+          f"{time.time()-t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,4 @@
+from repro.models.params import abstract_params, init_params, model_spec, partition_specs
+from repro.models.transformer import apply_model
+
+__all__ = ["abstract_params", "init_params", "model_spec", "partition_specs", "apply_model"]

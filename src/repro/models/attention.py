@@ -1,0 +1,275 @@
+"""Attention blocks: GQA/MQA self-attention (full-causal or sliding-window)
+and cross-attention (VLM image layers), with KV caches for serving.
+
+This is the paper's "MHA block": TP partitions the head dimension (wq/wk/wv
+column-split by head, wo row-split), so no synchronization happens inside
+self-attention (§III-B-1).  Entry from the seq-sharded connective block is
+an AllGather; exit back into it is a ReduceScatter — both materialized by
+GSPMD from the sharding constraints here + in layers.connective_*.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import apply_norm, connective_norm, connective_residual, rope
+from repro.models.sharding import constrain
+
+NEG_INF = -1e30
+
+
+def _heads_shardable(cfg: ModelConfig) -> bool:
+    """True if the query-head dim divides the model axis — the paper's
+    head-wise TP (§III-B-1).  Otherwise attention falls back to the SP
+    layout (seq-sharded queries, gathered K/V — the paper's §II-C-2 SP
+    pattern), used for 24-head archs on the 16-way mesh."""
+    from repro.models.sharding import logical_axis_size
+
+    ax = logical_axis_size("heads")
+    return ax <= 1 or cfg.num_heads % ax == 0
+
+
+def _q_axes(cfg: ModelConfig):
+    if _heads_shardable(cfg):
+        return ("batch", None, "heads", None)
+    return ("batch", "seq", None, None)  # SP-attention fallback
+
+
+def _project_qkv(p, x, cfg: ModelConfig):
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    if cfg.qkv_bias:
+        q = q + p["bq"]
+        k = k + p["bk"]
+        v = v + p["bv"]
+    q = constrain(q, _q_axes(cfg))
+    k = constrain(k, ("batch", None, "kv_heads", None))
+    v = constrain(v, ("batch", None, "kv_heads", None))
+    return q, k, v
+
+
+def _expand_kv(x, cfg: ModelConfig, heads_axis: bool):
+    """Repeat KV heads to the full query-head count so every attention
+    einsum is plainly sharded along heads (replicated KV + local repeat —
+    no collective).  The kv_seq name stays first so a seq-sharded decode
+    cache keeps its layout (flash-decoding) instead of resharding."""
+    g = cfg.num_heads // x.shape[2]
+    if g > 1:
+        x = jnp.repeat(x, g, axis=2)
+    if heads_axis:
+        x = constrain(x, ("batch", "kv_seq", "heads", None))
+    return x
+
+
+def _gqa_scores(q, k, cfg: ModelConfig):
+    """q: (B,S,H,hd), k: (B,L,KV,hd) -> scores (B,H,S,L)."""
+    hd = q.shape[-1]
+    shardable = _heads_shardable(cfg)
+    k = _expand_kv(k, cfg, shardable)
+    scores = jnp.einsum("bshd,bthd->bhst", q, k) / jnp.sqrt(hd).astype(q.dtype)
+    axes = ("batch", "heads", None, "kv_seq") if shardable else ("batch", None, "seq", "kv_seq")
+    return constrain(scores, axes)
+
+
+def _gqa_output(probs, v, cfg: ModelConfig):
+    """probs: (B,H,S,L), v: (B,L,KV,hd) -> (B,S,H,hd)."""
+    v = _expand_kv(v, cfg, _heads_shardable(cfg))
+    return jnp.einsum("bhst,bthd->bshd", probs, v)
+
+
+def _softmax(scores, mask):
+    scores = jnp.where(mask, scores.astype(jnp.float32), NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    return probs
+
+
+def causal_window_mask(q_pos, k_pos, window: int):
+    """q_pos: (B,S), k_pos: (B,L) or (L,) -> bool (B,1,S,L)."""
+    if k_pos.ndim == 1:
+        k_pos = k_pos[None, :]
+    m = k_pos[:, None, :] <= q_pos[:, :, None]
+    if window > 0:
+        m = m & (k_pos[:, None, :] > q_pos[:, :, None] - window)
+    m = m & (k_pos[:, None, :] >= 0)
+    return m[:, None, :, :]
+
+
+def _chunked_causal_attention(q, k, v, positions, window: int, cfg: ModelConfig):
+    """Query-chunked attention for long prefill: the live score buffer is
+    (B, H, chunk, S) instead of (B, H, S, S) — the jnp analogue of the
+    flash_attention Pallas kernel's blocking (which replaces this on TPU).
+    """
+    b, s, h, hd = q.shape
+    c = cfg.attn_chunk
+    assert s % c == 0
+    shardable = _heads_shardable(cfg)
+    k = _expand_kv(k, cfg, shardable)
+    v = _expand_kv(v, cfg, shardable)
+    outs = []
+    for i in range(s // c):
+        qi = jax.lax.dynamic_slice_in_dim(q, i * c, c, axis=1)
+        pos_i = jax.lax.dynamic_slice_in_dim(positions, i * c, c, axis=1)
+        scores = jnp.einsum("bshd,bthd->bhst", qi, k) / jnp.sqrt(hd).astype(q.dtype)
+        mask = causal_window_mask(pos_i, positions, window)
+        probs = _softmax(scores, mask).astype(v.dtype)
+        outs.append(jnp.einsum("bhst,bthd->bshd", probs, v))
+    return jnp.concatenate(outs, axis=1)
+
+
+def _window_cache_positions(cache_index, window: int):
+    """Token position held in each rolling-buffer slot after the write at
+    ``cache_index``: slot s holds t = idx - ((idx - s) mod W); t<0 => empty."""
+    slots = jnp.arange(window)
+    t = cache_index - jnp.mod(cache_index - slots, window)
+    return jnp.where(t >= 0, t, -1)
+
+
+def init_attn_cache(cfg: ModelConfig, batch: int, cache_len: int, dtype) -> Dict:
+    kv, hd = cfg.num_kv_heads, cfg.head_dim
+    shape = (batch, cache_len, kv, hd)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def attn_cache_struct(cfg: ModelConfig, batch: int, cache_len: int, dtype):
+    kv, hd = cfg.num_kv_heads, cfg.head_dim
+    shape = (batch, cache_len, kv, hd)
+    return {"k": jax.ShapeDtypeStruct(shape, dtype), "v": jax.ShapeDtypeStruct(shape, dtype)}
+
+
+CACHE_AXES = ("batch", "kv_seq", "kv_heads", None)
+XCACHE_AXES = ("batch", "img_seq", "kv_heads", None)
+
+
+def self_attention_block(
+    p: Dict,
+    x,
+    cfg: ModelConfig,
+    *,
+    mode: str,
+    window: int,
+    cache: Optional[Dict],
+    positions,
+    cache_index,
+    rng,
+    deterministic: bool,
+) -> Tuple[jax.Array, Optional[Dict]]:
+    """One MHA sub-layer (norm -> attn -> residual).  Returns (x, new_cache).
+
+    mode: "train" | "prefill" | "decode".
+    window: 0 for full causal, >0 for sliding-window (rolling cache).
+    positions: (B, S) absolute token positions (rope + causal mask).
+    cache_index: scalar int32 — write offset into the cache (prefill: 0).
+    """
+    xn = connective_norm(x, p["ln1"], cfg.norm)
+    xg = constrain(xn, ("batch", None, "embed"))  # AllGather: enter TP block
+    q, k, v = _project_qkv(p, xg, cfg)
+
+    if cfg.pos_embedding == "rope":
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+
+    new_cache = None
+    if mode in ("train", "prefill"):
+        if cfg.attn_chunk and q.shape[1] > cfg.attn_chunk:
+            out = _chunked_causal_attention(q, k, v, positions, window, cfg)
+        else:
+            mask = causal_window_mask(positions, positions, window)
+            probs = _softmax(_gqa_scores(q, k, cfg), mask)
+            out = _gqa_output(probs.astype(v.dtype), v, cfg)
+        if mode == "prefill":
+            new_cache = _write_prefill_cache(cfg, cache, k, v, window)
+    elif mode == "decode":
+        k_cache, v_cache = cache["k"], cache["v"]
+        cache_len = k_cache.shape[1]
+        if window > 0:
+            slot = jnp.mod(cache_index, window)
+        else:
+            slot = cache_index
+        k_cache = jax.lax.dynamic_update_slice(k_cache, k, (0, slot, 0, 0))
+        v_cache = jax.lax.dynamic_update_slice(v_cache, v, (0, slot, 0, 0))
+        k_cache = constrain(k_cache, CACHE_AXES)
+        v_cache = constrain(v_cache, CACHE_AXES)
+        new_cache = {"k": k_cache, "v": v_cache}
+        if window > 0:
+            k_pos = _window_cache_positions(cache_index, window)
+        else:
+            k_pos = jnp.where(jnp.arange(cache_len) <= cache_index,
+                              jnp.arange(cache_len), -1)
+        mask = causal_window_mask(positions, k_pos, window)
+        probs = _softmax(_gqa_scores(q, k_cache, cfg), mask)
+        out = _gqa_output(probs.astype(v.dtype), v_cache, cfg)
+    else:
+        raise ValueError(mode)
+
+    proj = jnp.einsum("bshk,hkd->bsd", out, p["wo"])  # row-parallel: partial sums
+    x = connective_residual(x, proj, cfg.dropout_rate, rng, deterministic)  # ReduceScatter
+    return x, new_cache
+
+
+def _write_prefill_cache(cfg: ModelConfig, cache: Optional[Dict], k, v, window: int):
+    """Fill the cache from prefill K/V.  Full attention: write [0, S).
+    Sliding window: keep the last W tokens at slots t % W."""
+    b, s = k.shape[0], k.shape[1]
+    if cache is None:
+        # allocate exactly what prefill produced (engine may re-allocate)
+        cache_len = min(s, window) if window > 0 else s
+        cache = init_attn_cache(cfg, b, cache_len, k.dtype)
+    cache_len = cache["k"].shape[1]
+    if window > 0 and s > window:
+        keep = window
+        k_keep = k[:, -keep:]
+        v_keep = v[:, -keep:]
+        slots = jnp.mod(jnp.arange(s - keep, s), window)
+        k_new = cache["k"].at[:, slots].set(k_keep)
+        v_new = cache["v"].at[:, slots].set(v_keep)
+    else:
+        k_new = jax.lax.dynamic_update_slice(cache["k"], k, (0, 0, 0, 0))
+        v_new = jax.lax.dynamic_update_slice(cache["v"], v, (0, 0, 0, 0))
+    return {"k": constrain(k_new, CACHE_AXES), "v": constrain(v_new, CACHE_AXES)}
+
+
+def cross_attention_block(
+    p: Dict,
+    x,
+    cfg: ModelConfig,
+    *,
+    mode: str,
+    img_embeds,
+    cache: Optional[Dict],
+    rng,
+    deterministic: bool,
+) -> Tuple[jax.Array, Optional[Dict]]:
+    """Cross-attention to (stubbed) vision patch embeddings.  The image K/V
+    are computed once (prefill/train) and frozen in the cache for decode."""
+    xn = connective_norm(x, p["ln1"], cfg.norm)
+    xg = constrain(xn, ("batch", None, "embed"))
+    q = jnp.einsum("bsd,dhk->bshk", xg, p["wq"])
+    if cfg.qkv_bias:
+        q = q + p["bq"]
+    q = constrain(q, ("batch", None, "heads", None))
+
+    if mode == "decode":
+        k, v = cache["k"], cache["v"]
+        new_cache = cache
+    else:
+        imgs = apply_norm(img_embeds, p["kv_norm"], cfg.norm)
+        k = jnp.einsum("bid,dhk->bihk", imgs, p["wk"])
+        v = jnp.einsum("bid,dhk->bihk", imgs, p["wv"])
+        if cfg.qkv_bias:
+            k = k + p["bk"]
+            v = v + p["bv"]
+        k = constrain(k, XCACHE_AXES)
+        v = constrain(v, XCACHE_AXES)
+        new_cache = {"k": k, "v": v} if mode == "prefill" else None
+
+    mask = jnp.ones((1, 1, q.shape[1], k.shape[1]), bool)
+    probs = _softmax(_gqa_scores(q, k, cfg), mask)
+    out = _gqa_output(probs.astype(v.dtype), v, cfg)
+    proj = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    proj = jnp.tanh(p["xgate"].astype(jnp.float32)).astype(proj.dtype) * proj
+    x = connective_residual(x, proj, cfg.dropout_rate, rng, deterministic)
+    return x, new_cache

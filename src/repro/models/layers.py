@@ -1,0 +1,95 @@
+"""Shared layer primitives: norms, positions, dropout, the Galaxy
+"connective block" (dropout + residual add + norm — the SP region)."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.sharding import constrain
+
+
+# --- norms -----------------------------------------------------------------
+
+def rmsnorm(x, scale, eps: float = 1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    out = x * jax.lax.rsqrt(var + eps)
+    return (out * (1.0 + scale.astype(jnp.float32))).astype(dt)
+
+
+def layernorm(x, scale, bias, eps: float = 1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    out = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (out * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dt)
+
+
+def apply_norm(x, p, kind: str):
+    if kind == "rmsnorm":
+        return rmsnorm(x, p["scale"])
+    return layernorm(x, p["scale"], p["bias"])
+
+
+# --- positions ----------------------------------------------------------------
+
+def rope(x, positions, theta: float = 10000.0):
+    """x: (..., S, H, hd); positions: broadcastable to (..., S)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freq = jnp.exp(-jnp.log(theta) * jnp.arange(half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freq  # (..., S, half)
+    ang = ang[..., None, :]  # broadcast over heads
+    sin, cos = jnp.sin(ang), jnp.cos(ang)
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    )
+    return out.astype(x.dtype)
+
+
+def sinusoidal_pos(positions, d_model: int, dtype=jnp.float32):
+    half = d_model // 2
+    freq = jnp.exp(-jnp.log(10000.0) * jnp.arange(half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freq
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1).astype(dtype)
+
+
+# --- dropout -------------------------------------------------------------------
+
+def dropout(x, rate: float, rng: Optional[jax.Array], deterministic: bool):
+    if deterministic or rate == 0.0 or rng is None:
+        return x
+    keep = 1.0 - rate
+    mask = jax.random.bernoulli(rng, keep, x.shape)
+    return jnp.where(mask, x / keep, jnp.zeros_like(x))
+
+
+# --- the Galaxy connective block (SP region) ---------------------------------
+#
+# Paper §III-B-3: Dropout -> Residual Add -> LayerNorm, partitioned along the
+# sequence dimension.  In pre-LN architectures the same element-wise ops
+# exist as (residual add) here + (the next sub-layer's input norm); the
+# ``seq`` constraint below is what makes the exit of the preceding TP block a
+# ReduceScatter instead of an AllReduce.
+
+def connective_residual(residual, sublayer_out, rate, rng, deterministic):
+    sublayer_out = constrain(sublayer_out, ("batch", "seq", "embed"))
+    residual = constrain(residual, ("batch", "seq", "embed"))
+    out = residual + dropout(sublayer_out, rate, rng, deterministic)
+    return constrain(out, ("batch", "seq", "embed"))
+
+
+def connective_norm(x, norm_params, norm_kind):
+    x = constrain(x, ("batch", "seq", "embed"))
+    return constrain(apply_norm(x, norm_params, norm_kind), ("batch", "seq", "embed"))
+
+
+# --- activations ----------------------------------------------------------------
+
+def activation_fn(name: str):
+    return {"gelu": jax.nn.gelu, "silu": jax.nn.silu}.get(name, jax.nn.gelu)

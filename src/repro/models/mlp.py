@@ -1,0 +1,36 @@
+"""MLP blocks (the paper's second TP target): first GEMM column-split along
+``ffn``, second GEMM row-split to match — no sync inside the block
+(§III-B-2); entry/exit collectives come from the connective constraints."""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import connective_norm, connective_residual
+from repro.models.sharding import constrain
+
+
+def mlp_apply(p: Dict, x, cfg: ModelConfig):
+    """x: (B, S, d) full-seq (TP region). Returns partial-sum (B, S, d)."""
+    if cfg.activation == "swiglu":
+        h = jax.nn.silu(jnp.einsum("bsd,df->bsf", x, p["w_gate"])) * jnp.einsum(
+            "bsd,df->bsf", x, p["w_up"]
+        )
+    elif cfg.activation == "geglu":
+        h = jax.nn.gelu(jnp.einsum("bsd,df->bsf", x, p["w_gate"])) * jnp.einsum(
+            "bsd,df->bsf", x, p["w_up"]
+        )
+    else:
+        h = jax.nn.gelu(jnp.einsum("bsd,df->bsf", x, p["w_up"]))
+    h = constrain(h, ("batch", None, "ffn"))
+    return jnp.einsum("bsf,fd->bsd", h, p["w_down"])
+
+
+def mlp_block(p: Dict, x, cfg: ModelConfig, *, rng, deterministic: bool):
+    xn = connective_norm(x, p["ln2"], cfg.norm)
+    xg = constrain(xn, ("batch", None, "embed"))  # AllGather
+    out = mlp_apply(p["mlp"], xg, cfg)
+    return connective_residual(x, out, cfg.dropout_rate, rng, deterministic)  # ReduceScatter

@@ -1,0 +1,117 @@
+"""Mixture-of-Experts block (granite-moe, olmoe).
+
+GShard-style capacity-based dispatch/combine expressed as einsums, grouped
+into token groups so the dispatch tensors stay small.  Layout under HMP:
+
+* token groups ``g`` are sharded over the data axes ("expert_group"),
+* the expert dim ``e`` is sharded over the model axis (expert parallelism),
+* dispatch is a local slice, the combine contraction over the sharded
+  expert dim produces partial sums whose exit into the seq-sharded
+  connective block is the same ReduceScatter every HMP TP block ends with —
+  the paper's sync-point structure is preserved for MoE.
+
+Experts are padded to a multiple of the expert-parallel degree; padding
+experts get -inf router logits and are never selected.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import connective_norm, connective_residual
+from repro.models.sharding import constrain
+
+CAPACITY_FACTOR = 2.0
+GROUP_SIZE = 128
+
+
+def _group_size(total_tokens: int) -> int:
+    t = min(GROUP_SIZE, total_tokens)
+    while total_tokens % t:
+        t -= 1
+    return t
+
+
+def moe_capacity(cfg: ModelConfig, group_tokens: int, capacity_factor: float = 0.0) -> int:
+    cf = capacity_factor or cfg.moe_capacity_factor
+    c = int(cf * cfg.experts_per_token * group_tokens / cfg.num_experts)
+    return max(c, 1)
+
+
+def moe_apply(p: Dict, x, cfg: ModelConfig, *, capacity_factor: float = 0.0
+              ) -> Tuple[jax.Array, Dict]:
+    """x: (B, S, d) full-seq (TP region).  Returns (partial-sum out, aux)."""
+    b, s, d = x.shape
+    e_pad = p["we_up"].shape[0]
+    e_real = cfg.num_experts
+    k = cfg.experts_per_token
+
+    total = b * s
+    t = _group_size(total)
+    g = total // t
+    xg = x.reshape(g, t, d)
+    xg = constrain(xg, ("expert_group", None, "embed"))
+
+    # --- router ---------------------------------------------------------
+    logits = jnp.einsum("gtd,de->gte", xg, p["router"]).astype(jnp.float32)
+    expert_valid = jnp.arange(e_pad) < e_real
+    logits = jnp.where(expert_valid, logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)  # (g, t, e) — for aux loss
+
+    top_vals, top_idx = jax.lax.top_k(logits, k)  # (g, t, k)
+    top_w = jax.nn.softmax(top_vals, axis=-1)     # normalized combine weights
+
+    # --- capacity assignment (GShard) ------------------------------------
+    cap = moe_capacity(cfg, t, capacity_factor)
+    combine = jnp.zeros((g, t, e_pad, cap), jnp.float32)
+    counts = jnp.zeros((g, e_pad), jnp.int32)
+    for j in range(k):
+        oh = jax.nn.one_hot(top_idx[:, :, j], e_pad, dtype=jnp.int32)  # (g,t,e)
+        pos = jnp.cumsum(oh, axis=1) - oh + counts[:, None, :]
+        keep = (pos < cap) & (oh > 0)
+        pos_oh = jax.nn.one_hot(jnp.where(keep, pos, cap), cap, dtype=jnp.float32)
+        combine = combine + top_w[:, :, j, None, None] * oh[..., None] * pos_oh
+        counts = counts + jnp.sum(oh, axis=1)
+    dispatch = (combine > 0).astype(x.dtype)
+    combine = combine.astype(x.dtype)
+    dispatch = constrain(dispatch, ("expert_group", None, "experts", None))
+    combine = constrain(combine, ("expert_group", None, "experts", None))
+
+    # --- expert FFN (expert-parallel over the model axis) -------------------
+    xe = jnp.einsum("gtec,gtd->gecd", dispatch, xg)
+    xe = constrain(xe, ("expert_group", "experts", None, None))
+    if cfg.activation in ("swiglu", "geglu"):
+        act = jax.nn.silu if cfg.activation == "swiglu" else jax.nn.gelu
+        h = act(jnp.einsum("gecd,edf->gecf", xe, p["we_gate"])) * jnp.einsum(
+            "gecd,edf->gecf", xe, p["we_up"]
+        )
+    else:
+        h = jax.nn.gelu(jnp.einsum("gecd,edf->gecf", xe, p["we_up"]))
+    h = constrain(h, ("expert_group", "experts", None, None))
+    ye = jnp.einsum("gecf,efd->gecd", h, p["we_down"])
+
+    # --- combine: contraction over sharded experts -> partial sums ----------
+    out = jnp.einsum("gtec,gecd->gtd", combine, ye)
+    out = out.reshape(b, s, d)
+
+    # --- aux losses ------------------------------------------------------
+    # load-balance (Switch eq. 4): E * sum_e f_e * p_e over real experts
+    top1 = jax.nn.one_hot(top_idx[:, :, 0], e_pad, dtype=jnp.float32)
+    f_e = jnp.mean(top1, axis=(0, 1))
+    p_e = jnp.mean(probs, axis=(0, 1))
+    lb_loss = e_real * jnp.sum(f_e * p_e)
+    z_loss = jnp.mean(jnp.square(jax.nn.logsumexp(logits, axis=-1)))
+    dropped = 1.0 - jnp.sum(dispatch.astype(jnp.float32)) / (g * t * k)
+    aux = {"moe_lb_loss": lb_loss, "moe_z_loss": z_loss, "moe_drop_frac": dropped}
+    return out, aux
+
+
+def moe_block(p: Dict, x, cfg: ModelConfig, *, rng, deterministic: bool):
+    xn = connective_norm(x, p["ln2"], cfg.norm)
+    xg = constrain(xn, ("batch", None, "embed"))  # AllGather: enter TP block
+    out, aux = moe_apply(p["moe"], xg, cfg)
+    x = connective_residual(x, out, cfg.dropout_rate, rng, deterministic)  # ReduceScatter
+    return x, aux

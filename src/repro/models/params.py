@@ -1,0 +1,286 @@
+"""Structural parameter descriptions.
+
+Every architecture's parameter tree is described once as a pytree of
+``PSpec`` (shape + logical axes + initializer).  From that single
+description we derive:
+
+* ``init_params``      — materialized arrays (tests, examples, training)
+* ``abstract_params``  — ShapeDtypeStructs (multi-pod dry-run: no allocation)
+* ``partition_specs``  — PartitionSpec tree for pjit in_shardings
+
+Layers that repeat are *stacked* along a leading group dimension and
+executed with ``jax.lax.scan`` so the lowered HLO stays small even for
+100-layer models (critical: dry-run compiles 512-way SPMD on one CPU core).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models.sharding import Rules
+
+EXPERT_PAD = 16   # expert-parallel degree the expert dim must divide by
+VOCAB_PAD = 256
+
+
+@dataclasses.dataclass(frozen=True)
+class PSpec:
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]
+    init: str = "normal"  # normal | zeros | ones | lru_a
+    scale: float = 0.02
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def padded_vocab(cfg: ModelConfig) -> int:
+    return cfg.padded_vocab(VOCAB_PAD) if cfg.vocab_size >= VOCAB_PAD else cfg.vocab_size
+
+
+def padded_experts(cfg: ModelConfig) -> int:
+    if not cfg.is_moe:
+        return 0
+    if cfg.num_experts >= EXPERT_PAD:
+        return cfg.padded_experts(EXPERT_PAD)
+    return cfg.num_experts
+
+
+# --- per-block specs ----------------------------------------------------------
+
+def _norm_spec(cfg: ModelConfig) -> Dict[str, PSpec]:
+    d = cfg.d_model
+    if cfg.norm == "rmsnorm":
+        return {"scale": PSpec((d,), (None,), "zeros")}
+    return {"scale": PSpec((d,), (None,), "ones"), "bias": PSpec((d,), (None,), "zeros")}
+
+
+def _inner_norm_spec(width: int) -> Dict[str, PSpec]:
+    return {"scale": PSpec((width,), (None,), "zeros")}
+
+
+def _mlp_spec(cfg: ModelConfig) -> Dict[str, PSpec]:
+    d, ff = cfg.d_model, cfg.d_ff
+    out = {
+        "w_up": PSpec((d, ff), ("embed_w", "ffn_w")),
+        "w_down": PSpec((ff, d), ("ffn_w", "embed_w")),
+    }
+    if cfg.activation in ("swiglu", "geglu"):
+        out["w_gate"] = PSpec((d, ff), ("embed_w", "ffn_w"))
+    return out
+
+
+def _moe_spec(cfg: ModelConfig) -> Dict[str, PSpec]:
+    d, ff = cfg.d_model, cfg.d_ff
+    e = padded_experts(cfg)
+    out = {
+        "router": PSpec((d, e), ("embed_w", None)),
+        "we_up": PSpec((e, d, ff), ("experts_w", "embed_w", None)),
+        "we_down": PSpec((e, ff, d), ("experts_w", None, "embed_w")),
+    }
+    if cfg.activation in ("swiglu", "geglu"):
+        out["we_gate"] = PSpec((e, d, ff), ("experts_w", "embed_w", None))
+    return out
+
+
+def _attn_spec(cfg: ModelConfig, cross: bool) -> Dict[str, PSpec]:
+    d, h, kv, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    p: Dict[str, PSpec] = {
+        "ln1": _norm_spec(cfg),
+        "wq": PSpec((d, h, hd), ("embed_w", "heads_w", None)),
+        "wk": PSpec((d, kv, hd), ("embed_w", "kv_heads_w", None)),
+        "wv": PSpec((d, kv, hd), ("embed_w", "kv_heads_w", None)),
+        "wo": PSpec((h, hd, d), ("heads_w", None, "embed_w")),
+        "ln2": _norm_spec(cfg),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = PSpec((h, hd), ("heads_w", None), "zeros")
+        p["bk"] = PSpec((kv, hd), ("kv_heads_w", None), "zeros")
+        p["bv"] = PSpec((kv, hd), ("kv_heads_w", None), "zeros")
+    if cross:
+        p["xgate"] = PSpec((1,), (None,), "zeros")
+        p["kv_norm"] = _norm_spec(cfg)
+    if cfg.is_moe:
+        p["moe"] = _moe_spec(cfg)
+    elif cfg.d_ff > 0:
+        p["mlp"] = _mlp_spec(cfg)
+    return p
+
+
+def _rec_spec(cfg: ModelConfig) -> Dict[str, PSpec]:
+    d, w, cw = cfg.d_model, cfg.lru_width, cfg.conv_width
+    p: Dict[str, PSpec] = {
+        "ln1": _norm_spec(cfg),
+        "w_in": PSpec((d, w), ("embed_w", "lru_w")),
+        "w_gate_in": PSpec((d, w), ("embed_w", "lru_w")),
+        "conv_w": PSpec((cw, w), (None, "lru_w")),
+        "conv_b": PSpec((w,), ("lru_w",), "zeros"),
+        # diagonal RG-LRU gates (block-diagonal in Griffin; see DESIGN.md §2)
+        "a_param": PSpec((w,), ("lru_w",), "lru_a"),
+        "gate_a_w": PSpec((w,), ("lru_w",), "zeros"),
+        "gate_a_b": PSpec((w,), ("lru_w",), "zeros"),
+        "gate_x_w": PSpec((w,), ("lru_w",), "zeros"),
+        "gate_x_b": PSpec((w,), ("lru_w",), "zeros"),
+        "w_out": PSpec((w, d), ("lru_w", "embed_w")),
+        "ln2": _norm_spec(cfg),
+    }
+    if cfg.d_ff > 0:
+        p["mlp"] = _mlp_spec(cfg)
+    return p
+
+
+def _mlstm_spec(cfg: ModelConfig) -> Dict[str, PSpec]:
+    d = cfg.d_model
+    di = int(d * cfg.proj_factor)
+    nh = cfg.num_heads
+    dh = di // nh
+    # xlstm-350m has only 4 heads — far fewer than the 16-way model axis —
+    # so TP shards the per-head feature dims (dh / inner), not the heads.
+    # q/k live on the contracted side of the recurrence and stay replicated;
+    # v and the state's value dim are model-sharded (see models/xlstm.py).
+    return {
+        "ln": _norm_spec(cfg),
+        "w_up": PSpec((d, 2 * di), ("embed_w", "inner_w")),
+        "wq": PSpec((nh, dh, dh), (None, None, None)),
+        "wk": PSpec((nh, dh, dh), (None, None, None)),
+        "wv": PSpec((nh, dh, dh), (None, None, "inner_w")),
+        "w_if": PSpec((nh, dh, 2), (None, None, None), "zeros"),
+        "b_if": PSpec((nh, 2), (None, None), "zeros"),
+        "mh_norm": _inner_norm_spec(di),
+        "w_down": PSpec((di, d), ("inner_w", "embed_w")),
+    }
+
+
+def _slstm_spec(cfg: ModelConfig) -> Dict[str, PSpec]:
+    d = cfg.d_model
+    di = int(d * cfg.proj_factor)
+    nh = cfg.num_heads
+    dh = di // nh
+    # sLSTM's recurrence mixes the full per-head state every step, so the
+    # recurrent internals stay replicated over the model axis; TP re-enters
+    # at the down projection (row-parallel -> ReduceScatter exit).
+    return {
+        "ln": _norm_spec(cfg),
+        "w_in": PSpec((d, 4, nh, dh), ("embed_w", None, None, None)),
+        "b_in": PSpec((4, nh, dh), (None, None, None), "zeros"),
+        # block-diagonal (per-head) recurrent matrix R: raw_t += h_{t-1} R
+        "w_rec": PSpec((nh, dh, 4, dh), (None, None, None, None), "normal", 0.01),
+        "mh_norm": _inner_norm_spec(di),
+        "w_down": PSpec((di, d), ("inner_w", "embed_w")),
+    }
+
+
+_BLOCK_SPECS = {
+    "attn": lambda cfg: _attn_spec(cfg, cross=False),
+    "xattn": lambda cfg: _attn_spec(cfg, cross=True),
+    "rec": _rec_spec,
+    "mlstm": _mlstm_spec,
+    "slstm": _slstm_spec,
+}
+
+
+# --- whole model ------------------------------------------------------------
+
+def model_spec(cfg: ModelConfig) -> Dict:
+    """PSpec pytree.  'groups' subtrees are stacked with leading dim
+    cfg.num_groups (handled by the consumers below); 'tail' subtrees are
+    per-layer."""
+    d = cfg.d_model
+    v = padded_vocab(cfg)
+    spec: Dict = {"embed": {}, "groups": {}, "tail": {}, "final_norm": _norm_spec(cfg)}
+    if cfg.input_mode == "token":
+        spec["embed"]["tok"] = PSpec((v, d), ("vocab_w", "embed_w"), "normal", 0.02)
+    if not cfg.tie_embeddings:
+        cb = max(1, cfg.num_codebooks)
+        spec["head"] = {"w": PSpec((cb, d, v), (None, "embed_w", "vocab_w"))}
+    for i, kind in enumerate(cfg.block_pattern):
+        spec["groups"][f"b{i}_{kind}"] = _BLOCK_SPECS[kind](cfg)
+    for i, kind in enumerate(cfg.tail_pattern):
+        spec["tail"][f"t{i}_{kind}"] = _BLOCK_SPECS[kind](cfg)
+    return spec
+
+
+def _is_grouped(path: Tuple) -> bool:
+    return len(path) > 0 and getattr(path[0], "key", None) == "groups"
+
+
+def _leaf_shape(cfg: ModelConfig, path, ps: PSpec) -> Tuple[int, ...]:
+    if _is_grouped(path):
+        return (cfg.num_groups,) + ps.shape
+    return ps.shape
+
+
+def _leaf_axes(path, ps: PSpec) -> Tuple[Optional[str], ...]:
+    if _is_grouped(path):
+        return (None,) + ps.axes
+    return ps.axes
+
+
+def abstract_params(cfg: ModelConfig, rules: Optional[Rules] = None):
+    """ShapeDtypeStruct tree (optionally with shardings attached)."""
+    dtype = jnp.dtype(cfg.param_dtype)
+    spec = model_spec(cfg)
+
+    def make(path, ps: PSpec):
+        shape = _leaf_shape(cfg, path, ps)
+        sharding = None
+        if rules is not None and rules.mesh is not None:
+            sharding = jax.sharding.NamedSharding(
+                rules.mesh, rules.spec(_leaf_axes(path, ps), shape=shape)
+            )
+        return jax.ShapeDtypeStruct(shape, dtype, sharding=sharding)
+
+    return jax.tree_util.tree_map_with_path(make, spec, is_leaf=lambda x: isinstance(x, PSpec))
+
+
+def partition_specs(cfg: ModelConfig, rules: Rules):
+    spec = model_spec(cfg)
+
+    def make(path, ps: PSpec):
+        return rules.spec(_leaf_axes(path, ps), shape=_leaf_shape(cfg, path, ps))
+
+    return jax.tree_util.tree_map_with_path(make, spec, is_leaf=lambda x: isinstance(x, PSpec))
+
+
+def init_params(cfg: ModelConfig, key: jax.Array):
+    dtype = jnp.dtype(cfg.param_dtype)
+    spec = model_spec(cfg)
+    leaves_with_paths, treedef = jax.tree_util.tree_flatten_with_path(
+        spec, is_leaf=lambda x: isinstance(x, PSpec)
+    )
+    keys = jax.random.split(key, len(leaves_with_paths))
+
+    def init_one(k, path, ps: PSpec):
+        shape = _leaf_shape(cfg, path, ps)
+        if ps.init == "zeros":
+            return jnp.zeros(shape, dtype)
+        if ps.init == "ones":
+            return jnp.ones(shape, dtype)
+        if ps.init == "lru_a":
+            # Griffin init: decay a in [0.9, 0.999]; a_param = softplus^-1(c^-1 * -log a)
+            u = jax.random.uniform(k, shape, jnp.float32, 0.9, 0.999)
+            inner = -jnp.log(u) / 8.0
+            ap = jnp.log(jnp.expm1(jnp.clip(inner, 1e-8, None)))
+            return ap.astype(dtype)
+        # fan-in scaled normal
+        fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+        scale = min(ps.scale, 1.0 / np.sqrt(max(fan_in, 1)))
+        return (jax.random.normal(k, shape, jnp.float32) * scale).astype(dtype)
+
+    leaves = [init_one(k, p, ps) for k, (p, ps) in zip(keys, leaves_with_paths)]
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def param_bytes(cfg: ModelConfig) -> int:
+    spec = model_spec(cfg)
+    total = 0
+    for path, ps in jax.tree_util.tree_flatten_with_path(
+        spec, is_leaf=lambda x: isinstance(x, PSpec)
+    )[0]:
+        total += int(np.prod(_leaf_shape(cfg, path, ps)))
+    return total * jnp.dtype(cfg.param_dtype).itemsize

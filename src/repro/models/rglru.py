@@ -1,0 +1,132 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma).
+
+The recurrence h_t = a_t ⊙ h_{t-1} + sqrt(1 - a_t²) ⊙ (i_t ⊙ x_t) is
+*diagonal*, so TP along the recurrence width introduces no cross-shard
+dependencies — the paper's HMP applies cleanly to an attention-free block
+(DESIGN.md §4).  The recurrence runs as a parallel associative scan over
+the sequence (train/prefill) or a single fused step (decode).
+
+Simplification vs Griffin: the r_t / i_t gates are diagonal (per-channel)
+rather than block-diagonal dense — noted in DESIGN.md §2.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import connective_norm, connective_residual
+from repro.models.sharding import constrain
+
+RGLRU_C = 8.0
+
+
+def _causal_conv(u, conv_w, conv_b, conv_state):
+    """Depthwise causal temporal conv, width cw.
+    u: (B,S,w); conv_w: (cw, w); conv_state: (B, cw-1, w) or None."""
+    cw = conv_w.shape[0]
+    if conv_state is None:
+        pad = jnp.zeros((u.shape[0], cw - 1, u.shape[2]), u.dtype)
+    else:
+        pad = conv_state.astype(u.dtype)
+    full = jnp.concatenate([pad, u], axis=1)  # (B, S+cw-1, w)
+    out = jnp.zeros_like(u)
+    s = u.shape[1]
+    for j in range(cw):
+        out = out + full[:, j : j + s, :] * conv_w[j]
+    new_state = full[:, -(cw - 1) :, :] if cw > 1 else pad
+    return out + conv_b, new_state
+
+
+def _gates(p, u):
+    """Diagonal RG-LRU gating. Returns (a, b) of h_t = a⊙h_{t-1} + b (fp32)."""
+    uf = u.astype(jnp.float32)
+    r = jax.nn.sigmoid(p["gate_a_w"].astype(jnp.float32) * uf + p["gate_a_b"].astype(jnp.float32))
+    i = jax.nn.sigmoid(p["gate_x_w"].astype(jnp.float32) * uf + p["gate_x_b"].astype(jnp.float32))
+    log_a = -RGLRU_C * jax.nn.softplus(p["a_param"].astype(jnp.float32)) * r
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.clip(1.0 - jnp.exp(2.0 * log_a), 1e-12, None)) * (i * uf)
+    return a, b
+
+
+def rglru_scan(a, b, h0: Optional[jax.Array]):
+    """Parallel associative scan of h_t = a_t h_{t-1} + b_t along axis 1.
+    a, b: (B, S, w) fp32; h0: (B, w) or None. Returns (h_seq, h_last)."""
+    if h0 is not None:
+        # fold the carry into the first step
+        b = b.at[:, 0, :].add(a[:, 0, :] * h0.astype(b.dtype))
+
+    def combine(x, y):
+        a1, b1 = x
+        a2, b2 = y
+        return a1 * a2, b1 * a2 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return h, h[:, -1, :]
+
+
+def init_rec_cache(cfg: ModelConfig, batch: int, dtype) -> Dict:
+    w, cw = cfg.lru_width, cfg.conv_width
+    return {
+        "h": jnp.zeros((batch, w), jnp.float32),
+        "conv": jnp.zeros((batch, cw - 1, w), dtype),
+    }
+
+
+def rec_cache_struct(cfg: ModelConfig, batch: int, dtype):
+    w, cw = cfg.lru_width, cfg.conv_width
+    return {
+        "h": jax.ShapeDtypeStruct((batch, w), jnp.float32),
+        "conv": jax.ShapeDtypeStruct((batch, cw - 1, w), dtype),
+    }
+
+
+REC_CACHE_AXES = {"h": ("batch", "lru"), "conv": ("batch", None, "lru")}
+
+
+def rglru_block(
+    p: Dict,
+    x,
+    cfg: ModelConfig,
+    *,
+    mode: str,
+    cache: Optional[Dict],
+    rng,
+    deterministic: bool,
+) -> Tuple[jax.Array, Optional[Dict]]:
+    """Griffin recurrent sub-layer: norm -> (gate branch ⊗ conv+RG-LRU branch)
+    -> out-proj -> residual.  Returns (x, new_cache)."""
+    xn = connective_norm(x, p["ln1"], cfg.norm)
+    xg = constrain(xn, ("batch", None, "embed"))  # AllGather: enter TP block
+
+    gate = jax.nn.gelu(jnp.einsum("bsd,dw->bsw", xg, p["w_gate_in"]))
+    u = jnp.einsum("bsd,dw->bsw", xg, p["w_in"])
+    gate = constrain(gate, ("batch", None, "lru"))
+    u = constrain(u, ("batch", None, "lru"))
+
+    conv_state = cache["conv"] if cache is not None else None
+    u, new_conv = _causal_conv(u, p["conv_w"], p["conv_b"], conv_state)
+
+    a, b = _gates(p, u)
+    if mode == "decode":
+        h_prev = cache["h"]
+        h_last = a[:, 0, :] * h_prev + b[:, 0, :]
+        h_seq = h_last[:, None, :]
+    else:
+        h0 = cache["h"] if cache is not None else None
+        h_seq, h_last = rglru_scan(a, b, h0)
+    h_seq = constrain(h_seq.astype(x.dtype), ("batch", None, "lru"))
+
+    new_cache = None
+    if mode in ("prefill", "decode"):
+        new_cache = {
+            "h": constrain(h_last, ("batch", "lru")),
+            "conv": constrain(new_conv, ("batch", None, "lru")),
+        }
+
+    merged = h_seq * gate
+    out = jnp.einsum("bsw,wd->bsd", merged, p["w_out"])  # row-parallel: partials
+    x = connective_residual(x, out, cfg.dropout_rate, rng, deterministic)  # ReduceScatter
+    return x, new_cache

@@ -1,0 +1,213 @@
+"""Logical-axis sharding rules (MaxText-style) — the bridge between model
+code and the Galaxy HMP layout.
+
+Model code annotates activations with *logical* axis names via
+``constrain(x, ("batch", "seq", "embed"))``.  A ``Rules`` table maps logical
+names to mesh axes; the HMP layout is expressed entirely through this table:
+
+* ``heads`` / ``ffn`` / ``experts``  -> "model"   (TP blocks: MHA + MLP/MoE)
+* ``seq``                            -> "model"   (SP connective blocks)
+* ``batch``                          -> ("pod", "data")
+
+GSPMD then materializes exactly the paper's synchronization points: the
+transition from a seq-sharded connective block into a head-sharded TP block
+is an AllGather; the partial-sum exit of a row-parallel GEMM constrained
+back to seq-sharded is a ReduceScatter (§III-B-4 of the paper).
+
+Outside a mesh context the constraints are no-ops, so the same model code
+runs single-device (tests) and multi-pod (dry-run).
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from dataclasses import dataclass, field
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+MeshAxes = Union[None, str, Tuple[str, ...]]
+
+
+@dataclass
+class Rules:
+    """Mapping from logical axis names to mesh axes (or None=replicated)."""
+
+    mapping: Dict[str, MeshAxes] = field(default_factory=dict)
+    mesh: Optional[Mesh] = None
+
+    def axis_size(self, name: str) -> int:
+        """Product of mesh-axis sizes a logical axis maps to (1 if unmapped)."""
+        ax = self.mapping.get(name)
+        if ax is None or self.mesh is None:
+            return 1
+        if isinstance(ax, str):
+            ax = (ax,)
+        size = 1
+        for a in ax:
+            size *= self.mesh.shape[a]
+        return size
+
+    def spec(self, names: Sequence[Optional[str]], shape: Optional[Sequence[int]] = None) -> P:
+        """PartitionSpec for logical axis names.  If ``shape`` is given,
+        mesh axes that do not evenly divide a dimension are dropped (e.g.
+        8 KV heads on a 16-way model axis -> replicated); for tuple
+        mappings the prefix that still divides is kept."""
+        axes = []
+        used: set = set()
+
+        def resolve(name, dim):
+            if name is None:
+                return None
+            ax = self.mapping.get(name)
+            if ax is None:
+                return None
+            if isinstance(ax, str):
+                ax = (ax,)
+            ax = tuple(a for a in ax if a not in used)
+            if not ax:
+                return None
+            if dim is not None and self.mesh is not None:
+                kept = []
+                prod = 1
+                for a in ax:
+                    if dim % (prod * self.mesh.shape[a]) == 0:
+                        kept.append(a)
+                        prod *= self.mesh.shape[a]
+                    else:
+                        break
+                ax = tuple(kept)
+                if not ax:
+                    return None
+            used.update(ax)
+            return ax if len(ax) > 1 else ax[0]
+
+        dims = list(shape) if shape is not None else [None] * len(names)
+        for n, d in zip(names, dims):
+            axes.append(resolve(n, d))
+        return P(*axes)
+
+
+_STATE = threading.local()
+
+
+def current_rules() -> Optional[Rules]:
+    return getattr(_STATE, "rules", None)
+
+
+@contextlib.contextmanager
+def axis_rules(rules: Optional[Rules]):
+    prev = current_rules()
+    _STATE.rules = rules
+    try:
+        yield
+    finally:
+        _STATE.rules = prev
+
+
+def constrain(x, names: Sequence[Optional[str]]):
+    """Apply a (shape-aware) sharding constraint if rules are active."""
+    rules = current_rules()
+    if rules is None or rules.mesh is None:
+        return x
+    spec = rules.spec(names, shape=x.shape)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(rules.mesh, spec))
+
+
+def logical_axis_size(name: str) -> int:
+    """Mesh extent a logical axis would shard over under the active rules."""
+    rules = current_rules()
+    if rules is None:
+        return 1
+    return rules.axis_size(name)
+
+
+def logical_to_spec(names: Sequence[Optional[str]], rules: Rules) -> P:
+    return rules.spec(names)
+
+
+# ---------------------------------------------------------------------------
+# Rule tables for the production shapes (see DESIGN.md §5).
+# ---------------------------------------------------------------------------
+
+def make_rules(
+    mesh: Optional[Mesh],
+    mode: str,
+    *,
+    multi_pod: bool = False,
+    batch_size: int = 0,
+    hmp_sequence_parallel: bool = True,
+    serve_weights_model_only: bool = False,
+) -> Rules:
+    """Build the logical->mesh table for a given execution mode.
+
+    mode: "train" | "prefill" | "decode" | "decode_long"
+    ``hmp_sequence_parallel=False`` gives the Megatron-TP baseline layout
+    (connective blocks replicated — the redundant-compute baseline the
+    paper compares against).
+    ``serve_weights_model_only=True`` drops the FSDP (data-axis) shard of
+    the weights for decode modes: weights live model-sharded only, removing
+    the per-step weight AllGather at the cost of num_data_shards x weight
+    memory (see EXPERIMENTS.md §Perf, qwen1.5-110b decode hillclimb).
+    """
+    dp: MeshAxes = ("pod", "data") if multi_pod else ("data",)
+    m = "model"
+
+    mapping: Dict[str, MeshAxes] = {
+        # weights
+        "embed_w": "data",        # FSDP shard of the embedding/contraction dim
+        "heads_w": m,
+        "kv_heads_w": m,
+        "ffn_w": m,
+        "experts_w": m,
+        "vocab_w": m,
+        "lru_w": m,
+        "inner_w": m,
+        # activations
+        "batch": dp,
+        "embed": None,
+        "heads": m,
+        "kv_heads": m,
+        "ffn": m,
+        "experts": m,
+        "vocab": m,
+        "lru": m,
+        "inner": m,
+        "img_seq": None,
+        "expert_group": dp,
+    }
+
+    if mode == "train" or mode == "prefill":
+        mapping["seq"] = m if hmp_sequence_parallel else None
+        mapping["kv_seq"] = None
+    elif mode == "decode":
+        # one-token step: SP is vacuous; shard the KV cache along sequence.
+        # Attention runs flash-decoding style: q/scores replicated over the
+        # model axis, cache seq-sharded, softmax reductions psum'd — so
+        # activation `heads` must NOT claim the model axis (a heads-sharded
+        # q would force a full cache reshard every layer).
+        mapping["seq"] = None
+        mapping["kv_seq"] = m
+        mapping["heads"] = None
+        mapping["kv_heads"] = None
+    elif mode == "decode_long":
+        # batch=1: batch axes are vacuous; context-parallel cache over the
+        # data axis as well as model
+        mapping["batch"] = None
+        mapping["seq"] = None
+        mapping["kv_seq"] = (("pod", "data", m) if multi_pod else ("data", m))
+        mapping["heads"] = None
+        mapping["kv_heads"] = None
+        mapping["expert_group"] = None
+    else:
+        raise ValueError(f"unknown mode {mode}")
+
+    # batch=1 shapes cannot shard batch
+    if batch_size == 1:
+        mapping["batch"] = None
+
+    if serve_weights_model_only and mode in ("prefill", "decode", "decode_long"):
+        mapping["embed_w"] = None
+
+    return Rules(mapping=mapping, mesh=mesh)

@@ -1,0 +1,245 @@
+"""Model assembly: embeddings -> scanned block groups -> norm -> logits.
+
+The layer stack is executed as ``jax.lax.scan`` over *pattern groups*
+(params stacked along a leading group dim) so the lowered HLO is O(1) in
+depth — 100-layer models compile as fast as 2-layer ones, which is what
+makes the 512-device dry-run tractable on one CPU core.  Remainder layers
+(``num_layers % len(pattern)``) run unscanned as "tail" blocks.
+
+Modes: "train" (no cache), "prefill" (build cache), "decode" (one token).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import params as params_lib
+from repro.models.attention import cross_attention_block, self_attention_block
+from repro.models.layers import apply_norm, sinusoidal_pos
+from repro.models.mlp import mlp_block
+from repro.models.moe import moe_block
+from repro.models.rglru import rglru_block
+from repro.models.sharding import constrain, current_rules
+from repro.models.xlstm import mlstm_block, slstm_block
+
+AUX_KEYS = ("moe_lb_loss", "moe_z_loss", "moe_drop_frac")
+
+
+def _zero_aux():
+    return {k: jnp.zeros((), jnp.float32) for k in AUX_KEYS}
+
+
+def _add_aux(a, b):
+    return {k: a[k] + b[k] for k in AUX_KEYS}
+
+
+def _maybe_cast(tree, cfg: ModelConfig):
+    target = jnp.dtype(cfg.dtype)
+    if jnp.dtype(cfg.param_dtype) == target:
+        return tree
+    return jax.tree.map(
+        lambda w: w.astype(target) if jnp.issubdtype(w.dtype, jnp.floating) else w,
+        tree,
+    )
+
+
+def embed_tokens(tok_w, tokens, cfg: ModelConfig):
+    # gather from the (vocab, embed)-sharded table; GSPMD materializes the
+    # table once per step (cheap vs a (B,S,V) one-hot contraction)
+    return tok_w[tokens]
+
+
+def compute_logits(params, cfg: ModelConfig, x):
+    """x: (B,S,d) -> logits (B,S,V) in model dtype (fp32 upcast happens in
+    fused loss reductions — a (B,S,150k) fp32 buffer would dominate HBM).
+    (B,S,cb,V) for codebook heads."""
+    vp = params_lib.padded_vocab(cfg)
+    if cfg.tie_embeddings:
+        # gather the (vocab/embed)-sharded table before contracting: a 0.3-2.5GB
+        # weight AllGather instead of a (B,S,V) logits AllReduce
+        w = constrain(_maybe_cast(params["embed"]["tok"], cfg), (None, None))
+        logits = jnp.einsum("bsd,vd->bsv", x, w)
+        logits = logits[..., None, :]  # cb dim
+    else:
+        w = constrain(_maybe_cast(params["head"]["w"], cfg), (None, None, None))
+        logits = jnp.einsum("bsd,cdv->bscv", x, w)
+    if vp != cfg.vocab_size:
+        valid = jnp.arange(vp) < cfg.vocab_size
+        logits = jnp.where(valid, logits, jnp.asarray(-1e30, logits.dtype))
+    # sequence stays SP-sharded through the head; vocab replicated per chip
+    logits = constrain(logits, ("batch", "seq", None, None))
+    if max(1, cfg.num_codebooks) == 1:
+        logits = logits[..., 0, :]
+    return logits
+
+
+def _apply_block(
+    kind: str,
+    p: Dict,
+    x,
+    cfg: ModelConfig,
+    *,
+    mode: str,
+    cache,
+    positions,
+    cache_index,
+    rng,
+    deterministic: bool,
+    img_embeds,
+):
+    aux = _zero_aux()
+    if kind == "attn":
+        x, new_cache = self_attention_block(
+            p, x, cfg, mode=mode, window=cfg.window, cache=cache,
+            positions=positions, cache_index=cache_index, rng=rng,
+            deterministic=deterministic,
+        )
+    elif kind == "xattn":
+        x, new_cache = cross_attention_block(
+            p, x, cfg, mode=mode, img_embeds=img_embeds, cache=cache,
+            rng=rng, deterministic=deterministic,
+        )
+    elif kind == "rec":
+        x, new_cache = rglru_block(
+            p, x, cfg, mode=mode, cache=cache, rng=rng, deterministic=deterministic
+        )
+    elif kind == "mlstm":
+        x, new_cache = mlstm_block(
+            p, x, cfg, mode=mode, cache=cache, rng=rng, deterministic=deterministic
+        )
+    elif kind == "slstm":
+        x, new_cache = slstm_block(
+            p, x, cfg, mode=mode, cache=cache, rng=rng, deterministic=deterministic
+        )
+    else:
+        raise ValueError(kind)
+
+    # FFN sub-layer for attention-bearing blocks (rec blocks keep Griffin's MLP)
+    if kind in ("attn", "xattn", "rec"):
+        if cfg.is_moe:
+            x, aux = moe_block(p, x, cfg, rng=rng, deterministic=deterministic)
+        elif cfg.d_ff > 0:
+            x = mlp_block(p, x, cfg, rng=rng, deterministic=deterministic)
+    return x, new_cache, aux
+
+
+def apply_model(
+    params,
+    cfg: ModelConfig,
+    *,
+    tokens=None,
+    embeds=None,
+    img_embeds=None,
+    mode: str = "train",
+    cache: Optional[Dict] = None,
+    positions=None,
+    cache_index=None,
+    rng=None,
+    deterministic: bool = True,
+    unroll: bool = False,
+) -> Tuple[jax.Array, Optional[Dict], Dict]:
+    """Returns (logits, new_cache, aux).  ``unroll=True`` unrolls the group
+    scan (used by the dry-run cost measurement: XLA's cost_analysis counts a
+    while-loop body once regardless of trip count)."""
+    dtype = jnp.dtype(cfg.dtype)
+
+    if cfg.input_mode == "token":
+        x = embed_tokens(_maybe_cast(params["embed"]["tok"], cfg), tokens, cfg).astype(dtype)
+        bsz, seq = tokens.shape
+    else:
+        x = embeds.astype(dtype)
+        bsz, seq = embeds.shape[0], embeds.shape[1]
+
+    if positions is None:
+        if mode == "decode":
+            positions = jnp.full((bsz, seq), cache_index, jnp.int32)
+        else:
+            positions = jnp.broadcast_to(jnp.arange(seq, dtype=jnp.int32), (bsz, seq))
+    if mode == "decode" and cache_index is None:
+        raise ValueError("decode mode requires cache_index")
+
+    if cfg.pos_embedding == "sinusoidal":
+        x = x + sinusoidal_pos(positions, cfg.d_model, dtype)
+    x = constrain(x, ("batch", "seq", "embed"))
+
+    pattern = cfg.block_pattern
+    n_per_group = len(pattern)
+
+    def run_group(x, gparams, gcache, gidx):
+        # low-precision serving weights (e.g. fp8) are cast to the compute
+        # dtype one layer-group at a time (fused/transient, never resident)
+        gparams = _maybe_cast(gparams, cfg)
+        new_gcache = {}
+        aux = _zero_aux()
+        for i, kind in enumerate(pattern):
+            key = f"b{i}_{kind}"
+            rng_i = jax.random.fold_in(rng, gidx * n_per_group + i) if rng is not None else None
+            x, c_new, a = _apply_block(
+                kind, gparams[key], x, cfg, mode=mode,
+                cache=None if gcache is None else gcache[key],
+                positions=positions, cache_index=cache_index, rng=rng_i,
+                deterministic=deterministic, img_embeds=img_embeds,
+            )
+            if c_new is not None:
+                new_gcache[key] = c_new
+            aux = _add_aux(aux, a)
+        return x, new_gcache, aux
+
+    use_cache = mode in ("prefill", "decode")
+    has_input_cache = cache is not None  # prefill may allocate its own
+
+    def scan_body(carry, xs):
+        x, gidx = carry
+        if has_input_cache:
+            gp, gc = xs
+        else:
+            gp, gc = xs, None
+        x, new_gc, aux = run_group(x, gp, gc, gidx)
+        ys = (new_gc, aux) if use_cache else aux
+        return (x, gidx + 1), ys
+
+    body = scan_body
+    if cfg.remat and mode == "train" and cfg.remat_policy != "none":
+        policy = None  # "full": recompute everything
+        if cfg.remat_policy == "dots":
+            policy = jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+        body = jax.checkpoint(scan_body, policy=policy)
+
+    xs = (params["groups"], cache["groups"]) if has_input_cache else params["groups"]
+    (x, _), ys = jax.lax.scan(
+        body, (x, jnp.int32(0)), xs, unroll=cfg.num_groups if unroll else 1
+    )
+    if use_cache:
+        new_group_cache, aux_stacked = ys
+    else:
+        new_group_cache, aux_stacked = None, ys
+    aux = {k: jnp.sum(v) for k, v in aux_stacked.items()}
+
+    # tail (remainder) blocks — unscanned
+    new_tail_cache = {}
+    for i, kind in enumerate(cfg.tail_pattern):
+        key = f"t{i}_{kind}"
+        rng_i = (
+            jax.random.fold_in(rng, cfg.num_groups * n_per_group + i)
+            if rng is not None
+            else None
+        )
+        x, c_new, a = _apply_block(
+            kind, _maybe_cast(params["tail"][key], cfg), x, cfg, mode=mode,
+            cache=None if cache is None else cache["tail"].get(key),
+            positions=positions, cache_index=cache_index, rng=rng_i,
+            deterministic=deterministic, img_embeds=img_embeds,
+        )
+        if c_new is not None:
+            new_tail_cache[key] = c_new
+        aux = _add_aux(aux, a)
+
+    x = constrain(x, ("batch", "seq", "embed"))
+    x = apply_norm(x, _maybe_cast(params["final_norm"], cfg), cfg.norm)
+    logits = compute_logits(params, cfg, x)
+
+    new_cache = {"groups": new_group_cache, "tail": new_tail_cache} if use_cache else None
+    return logits, new_cache, aux

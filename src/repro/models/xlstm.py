@@ -1,0 +1,304 @@
+"""xLSTM blocks: mLSTM (matrix memory, parallelizable) and sLSTM (scalar
+memory with exponential gating and a true sequential recurrence).
+
+TP mapping (DESIGN.md §4): xlstm-350m has 4 heads — fewer than the 16-way
+model axis — so TP shards the *inner feature* dims.  mLSTM: the state's
+value dim is model-sharded (the k·q contraction side stays replicated), so
+the recurrence is comm-free.  sLSTM: the per-step recurrence mixes the whole
+per-head state, so the recurrent core is replicated and TP re-enters at the
+row-parallel down projection (ReduceScatter exit) — an inherent limit of
+sequential recurrences, noted in DESIGN.md.
+
+States are fp32 with max-stabilizer log-space gating (xLSTM eq. 15/24).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import connective_norm, connective_residual
+from repro.models.sharding import constrain
+
+
+def _dims(cfg: ModelConfig):
+    di = int(cfg.d_model * cfg.proj_factor)
+    nh = cfg.num_heads
+    dh = di // nh
+    return di, nh, dh
+
+
+def _mh_rmsnorm(h, scale):
+    """Per-head RMS norm: h (..., nh, dh); scale (nh*dh,)."""
+    dt = h.dtype
+    hf = h.astype(jnp.float32)
+    var = jnp.mean(jnp.square(hf), axis=-1, keepdims=True)
+    out = hf * jax.lax.rsqrt(var + 1e-6)
+    s = (1.0 + scale.astype(jnp.float32)).reshape(h.shape[-2], h.shape[-1])
+    return (out * s).astype(dt)
+
+
+# --- mLSTM -------------------------------------------------------------------
+
+def init_mlstm_cache(cfg: ModelConfig, batch: int) -> Dict:
+    _, nh, dh = _dims(cfg)
+    return {
+        "c": jnp.zeros((batch, nh, dh, dh), jnp.float32),  # (v-dim, k-dim)
+        "n": jnp.zeros((batch, nh, dh), jnp.float32),
+        "m": jnp.full((batch, nh), -1e30, jnp.float32),
+    }
+
+
+def mlstm_cache_struct(cfg: ModelConfig, batch: int):
+    _, nh, dh = _dims(cfg)
+    return {
+        "c": jax.ShapeDtypeStruct((batch, nh, dh, dh), jnp.float32),
+        "n": jax.ShapeDtypeStruct((batch, nh, dh), jnp.float32),
+        "m": jax.ShapeDtypeStruct((batch, nh), jnp.float32),
+    }
+
+
+MLSTM_CACHE_AXES = {
+    "c": ("batch", None, "inner", None),
+    "n": ("batch", None, None),
+    "m": ("batch", None),
+}
+
+
+def _mlstm_step(state, inp):
+    """One recurrent step. state: (c (B,nh,dv,dk), n (B,nh,dk), m (B,nh)).
+    inp: q,k,v (B,nh,d*), i_raw,f_raw (B,nh)."""
+    c, n, m = state
+    q, k, v, i_raw, f_raw = inp
+    logf = jax.nn.log_sigmoid(f_raw)
+    m_new = jnp.maximum(logf + m, i_raw)
+    i = jnp.exp(i_raw - m_new)
+    f = jnp.exp(logf + m - m_new)
+    c = f[..., None, None] * c + i[..., None, None] * (v[..., :, None] * k[..., None, :])
+    n = f[..., None] * n + i[..., None] * k
+    num = jnp.einsum("bnvk,bnk->bnv", c, q)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bnk,bnk->bn", n, q)), jnp.exp(-m_new))
+    h = num / den[..., None]
+    return (c, n, m_new), h
+
+
+def mlstm_scan(q, k, v, i_raw, f_raw, state):
+    """Recurrent scan over time (reference/oracle; O(S) carries make it
+    training-infeasible — use mlstm_chunked).  q,k,v: (B,S,nh,d*) fp32;
+    gates (B,S,nh).  Returns h (B,S,nh,dv) and final state."""
+
+    def step(carry, xs):
+        return _mlstm_step(carry, xs)
+
+    xs = (
+        q.transpose(1, 0, 2, 3),
+        k.transpose(1, 0, 2, 3),
+        v.transpose(1, 0, 2, 3),
+        i_raw.transpose(1, 0, 2),
+        f_raw.transpose(1, 0, 2),
+    )
+    state, h = jax.lax.scan(step, state, xs)
+    return h.transpose(1, 0, 2, 3), state
+
+
+def mlstm_chunked(q, k, v, i_raw, f_raw, state, chunk: int):
+    """Chunkwise-parallel mLSTM (exact, same stabilizer semantics as the
+    recurrent step): intra-chunk attention-like weights in log space +
+    inter-chunk recurrence over chunk boundaries only.  Memory: O(S/chunk)
+    carried states instead of O(S)."""
+    b, s, nh, dk = k.shape
+    dv = v.shape[-1]
+    nc = s // chunk
+    assert s % chunk == 0
+
+    def to_chunks(x):
+        return x.reshape(b, nc, chunk, *x.shape[2:]).transpose(
+            1, 0, *range(2, x.ndim + 1)
+        )
+
+    qc, kc, vc = to_chunks(q), to_chunks(k), to_chunks(v)
+    ic, fc = to_chunks(i_raw), to_chunks(f_raw)
+
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+
+    def chunk_step(carry, xs):
+        c_prev, n_prev, m_prev = carry          # (B,nh,dv,dk), (B,nh,dk), (B,nh)
+        qt, kt, vt, it, ft = xs                 # (B,L,nh,*)
+        logf = jax.nn.log_sigmoid(ft)           # (B,L,nh)
+        bcum = jnp.cumsum(logf, axis=1)         # inclusive decay sums
+        # stabilizer: m_t = max(m_prev + b_t, max_{tau<=t}(b_t - b_tau + i_tau))
+        gi = jax.lax.cummax(it - bcum, axis=1)
+        m_intra = bcum + gi
+        m_t = jnp.maximum(m_prev[:, None] + bcum, m_intra)  # (B,L,nh)
+        # intra-chunk weights w[t,tau] = exp(b_t - b_tau + i_tau - m_t)
+        logw = (
+            bcum[:, :, None, :] - bcum[:, None, :, :] + it[:, None, :, :]
+            - m_t[:, :, None, :]
+        )  # (B, t, tau, nh)
+        w = jnp.where(tri[None, :, :, None], jnp.exp(logw), 0.0)
+        # attention-like intra term
+        qk = jnp.einsum("blnk,btnk->bltn", qt, kt)     # (B, t, tau, nh)
+        intra = jnp.einsum("bltn,bltn,btnv->blnv", w, qk, vt)
+        n_intra = jnp.einsum("bltn,btnk->blnk", w, kt)
+        # inter-chunk (state) term
+        decay = jnp.exp(m_prev[:, None] + bcum - m_t)   # (B,L,nh)
+        inter = jnp.einsum("blnk,bnvk->blnv", qt, c_prev) * decay[..., None]
+        n_inter = n_prev[:, None] * decay[..., None]
+        num = intra + inter
+        n_t = n_intra + n_inter
+        den = jnp.maximum(
+            jnp.abs(jnp.einsum("blnk,blnk->bln", n_t, qt)), jnp.exp(-m_t)
+        )
+        h = num / den[..., None]
+        # carry update to the chunk end (position L-1)
+        b_l = bcum[:, -1]                                # (B,nh)
+        m_new = m_t[:, -1]
+        c_decay = jnp.exp(m_prev + b_l - m_new)
+        wl = jnp.exp(bcum[:, -1:, :] - bcum + it - m_new[:, None])  # (B,L,nh)
+        c_new = c_decay[..., None, None] * c_prev + jnp.einsum(
+            "btn,btnv,btnk->bnvk", wl, vt, kt
+        )
+        n_new = c_decay[..., None] * n_prev + jnp.einsum("btn,btnk->bnk", wl, kt)
+        return (c_new, n_new, m_new), h
+
+    carry, h = jax.lax.scan(chunk_step, state, (qc, kc, vc, ic, fc))
+    h = h.transpose(1, 0, 2, 3, 4).reshape(b, s, nh, dv)
+    return h, carry
+
+
+def mlstm_block(
+    p: Dict,
+    x,
+    cfg: ModelConfig,
+    *,
+    mode: str,
+    cache: Optional[Dict],
+    rng,
+    deterministic: bool,
+) -> Tuple[jax.Array, Optional[Dict]]:
+    di, nh, dh = _dims(cfg)
+    xn = connective_norm(x, p["ln"], cfg.norm)
+    xg = constrain(xn, ("batch", None, "embed"))  # AllGather: enter TP block
+    b, s, _ = xg.shape
+
+    up = jnp.einsum("bsd,de->bse", xg, p["w_up"])
+    up = constrain(up, ("batch", None, "inner"))
+    xi, og = up[..., :di], up[..., di:]
+    xi_h = xi.reshape(b, s, nh, dh)
+
+    # q/k on the contracted (replicated) side; v on the sharded value side
+    q = jnp.einsum("bsnd,nde->bsne", xi_h, p["wq"]).astype(jnp.float32)
+    k = jnp.einsum("bsnd,nde->bsne", xi_h, p["wk"]).astype(jnp.float32) / jnp.sqrt(dh)
+    v = jnp.einsum("bsnd,nde->bsne", xi_h, p["wv"]).astype(jnp.float32)
+    q = constrain(q, ("batch", None, None, None))
+    k = constrain(k, ("batch", None, None, None))
+    v = constrain(v, ("batch", None, None, "inner"))
+    gates = jnp.einsum("bsnd,ndg->bsng", xi_h, p["w_if"]).astype(jnp.float32) + p[
+        "b_if"
+    ].astype(jnp.float32)
+    i_raw, f_raw = gates[..., 0], gates[..., 1]
+
+    state = cache
+    if state is None:
+        state = init_mlstm_cache(cfg, b)
+    if mode == "decode":
+        (c, n, m), h = _mlstm_step(
+            (state["c"], state["n"], state["m"]),
+            (q[:, 0], k[:, 0], v[:, 0], i_raw[:, 0], f_raw[:, 0]),
+        )
+        h = h[:, None]
+        new_cache = {"c": c, "n": n, "m": m}
+    else:
+        st = (state["c"], state["n"], state["m"])
+        if s % cfg.mlstm_chunk == 0 and s > cfg.mlstm_chunk:
+            h, (c, n, m) = mlstm_chunked(q, k, v, i_raw, f_raw, st, cfg.mlstm_chunk)
+        else:
+            h, (c, n, m) = mlstm_scan(q, k, v, i_raw, f_raw, st)
+        new_cache = {"c": c, "n": n, "m": m} if mode == "prefill" else None
+
+    h = _mh_rmsnorm(h.astype(x.dtype), p["mh_norm"]["scale"])
+    h = constrain(h, ("batch", None, None, "inner"))
+    merged = (h.reshape(b, -1, di)) * jax.nn.silu(og)
+    out = jnp.einsum("bse,ed->bsd", merged, p["w_down"])  # row-parallel partials
+    x = connective_residual(x, out, cfg.dropout_rate, rng, deterministic)
+    return x, new_cache
+
+
+# --- sLSTM -------------------------------------------------------------------
+
+def init_slstm_cache(cfg: ModelConfig, batch: int) -> Dict:
+    _, nh, dh = _dims(cfg)
+    z = jnp.zeros((batch, nh, dh), jnp.float32)
+    return {"h": z, "c": z, "n": z + 1e-6, "m": jnp.full((batch, nh, dh), -1e30, jnp.float32)}
+
+
+def slstm_cache_struct(cfg: ModelConfig, batch: int):
+    _, nh, dh = _dims(cfg)
+    sd = jax.ShapeDtypeStruct((batch, nh, dh), jnp.float32)
+    return {"h": sd, "c": sd, "n": sd, "m": sd}
+
+
+SLSTM_CACHE_AXES = {k: ("batch", None, None) for k in ("h", "c", "n", "m")}
+
+
+def _slstm_step(state, x_part, w_rec):
+    """x_part: (B,4,nh,dh) fp32 pre-activations from the input projection."""
+    h, c, n, m = state
+    rec = jnp.einsum("bnd,ndge->bgne", h, w_rec.astype(jnp.float32))
+    raw = x_part + rec
+    i_raw, f_raw, z_raw, o_raw = raw[:, 0], raw[:, 1], raw[:, 2], raw[:, 3]
+    logf = jax.nn.log_sigmoid(f_raw)
+    m_new = jnp.maximum(logf + m, i_raw)
+    i = jnp.exp(i_raw - m_new)
+    f = jnp.exp(logf + m - m_new)
+    c_new = f * c + i * jnp.tanh(z_raw)
+    n_new = f * n + i
+    h_new = jax.nn.sigmoid(o_raw) * c_new / jnp.maximum(n_new, 1e-6)
+    return (h_new, c_new, n_new, m_new), h_new
+
+
+def slstm_block(
+    p: Dict,
+    x,
+    cfg: ModelConfig,
+    *,
+    mode: str,
+    cache: Optional[Dict],
+    rng,
+    deterministic: bool,
+) -> Tuple[jax.Array, Optional[Dict]]:
+    di, nh, dh = _dims(cfg)
+    xn = connective_norm(x, p["ln"], cfg.norm)
+    xg = constrain(xn, ("batch", None, "embed"))
+    b, s, _ = xg.shape
+
+    x_part = (
+        jnp.einsum("bsd,dgne->bsgne", xg, p["w_in"]) + p["b_in"]
+    ).astype(jnp.float32)
+
+    state = cache
+    if state is None:
+        state = init_slstm_cache(cfg, b)
+    st = (state["h"], state["c"], state["n"], state["m"])
+
+    if mode == "decode":
+        st, h = _slstm_step(st, x_part[:, 0], p["w_rec"])
+        h_seq = h[:, None]
+    else:
+        def step(carry, xp):
+            return _slstm_step(carry, xp, p["w_rec"])
+
+        st, h_seq = jax.lax.scan(step, st, x_part.transpose(1, 0, 2, 3, 4))
+        h_seq = h_seq.transpose(1, 0, 2, 3)
+
+    new_cache = None
+    if mode in ("prefill", "decode"):
+        new_cache = {"h": st[0], "c": st[1], "n": st[2], "m": st[3]}
+
+    h_seq = _mh_rmsnorm(h_seq.astype(x.dtype), p["mh_norm"]["scale"])
+    merged = constrain(h_seq.reshape(b, s, di), ("batch", None, "inner"))
+    out = jnp.einsum("bse,ed->bsd", merged, p["w_down"])  # row-parallel partials
+    x = connective_residual(x, out, cfg.dropout_rate, rng, deterministic)
+    return x, new_cache

@@ -1,0 +1,162 @@
+"""Roofline analysis from compiled dry-run artifacts.
+
+Three terms per (arch x shape x mesh), all in seconds-per-step per chip:
+
+  compute    = HLO_FLOPs_per_chip / peak_FLOP/s          (197 TFLOP/s bf16)
+  memory     = HLO_bytes_per_chip / HBM_bw               (819 GB/s)
+  collective = collective_bytes_per_chip / link_bw       (~50 GB/s/link ICI)
+
+HLO_FLOPs / bytes come from ``compiled.cost_analysis()`` (the partitioned,
+per-device module).  collective_bytes is parsed from the post-SPMD HLO text:
+for every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute we sum the *output* tensor bytes (per-device received
+volume; all-reduce counted twice — RS + AG of the ring implementation).
+
+MODEL_FLOPS = 6·N·D (training) or 2·N·D (inference forward), N_active for
+MoE; the ratio MODEL_FLOPS / HLO_FLOPs exposes remat/dispatch waste.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Optional
+
+from repro.core.costmodel import TPU_V5E
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_COLLECTIVE_RE = re.compile(
+    r"=\s*(\([^)]*\)|[a-z0-9]+\[[0-9,]*\]\S*)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start|-done)?\("
+)
+
+# received-volume multiplier per op.  NOTE: the CPU backend decomposes
+# reduce-scatter into all-reduce + dynamic-slice, so all-reduce here usually
+# stands for what a TPU lowers as a ReduceScatter — weight 1.0 (received
+# bytes counted once) is the closer approximation of the TPU schedule.
+_OP_WEIGHT = {
+    "all-gather": 1.0,
+    "reduce-scatter": 1.0,
+    "all-to-all": 1.0,
+    "collective-permute": 1.0,
+    "all-reduce": 1.0,
+}
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, float]:
+    """Per-op-type received bytes (per device), from post-SPMD HLO."""
+    out: Dict[str, float] = {}
+    for m in _COLLECTIVE_RE.finditer(hlo_text):
+        shape_str, op, suffix = m.group(1), m.group(2), m.group(3)
+        if suffix == "-done":
+            continue  # counted at -start
+        b = _shape_bytes(shape_str) * _OP_WEIGHT[op]
+        out[op] = out.get(op, 0.0) + b
+    out["total"] = sum(v for k, v in out.items() if k != "total")
+    return out
+
+
+@dataclasses.dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    hlo_flops: float          # per chip
+    hlo_bytes: float          # per chip (HBM traffic)
+    coll_bytes: Dict[str, float]  # per chip
+    model_flops: float        # global useful FLOPs (6ND / 2ND)
+    peak_mem_bytes: Optional[float] = None
+    # XLA:CPU promotes bf16 tensors to f32; a bf16 model's HBM/ICI traffic on
+    # TPU is therefore ~half of what the CPU-compiled HLO reports.
+    dtype_factor: float = 1.0
+
+    @property
+    def t_compute(self) -> float:
+        return self.hlo_flops / TPU_V5E["peak_flops"]
+
+    @property
+    def t_memory(self) -> float:
+        return self.hlo_bytes * self.dtype_factor / TPU_V5E["hbm_bw"]
+
+    @property
+    def t_collective(self) -> float:
+        return self.coll_bytes.get("total", 0.0) * self.dtype_factor / TPU_V5E["ici_bw"]
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {
+            "compute": self.t_compute,
+            "memory": self.t_memory,
+            "collective": self.t_collective,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_ratio(self) -> float:
+        total_hlo = self.hlo_flops * self.chips
+        return self.model_flops / total_hlo if total_hlo else 0.0
+
+    @property
+    def step_time(self) -> float:
+        """Roofline lower bound on step time (terms overlap-free)."""
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def mfu(self) -> float:
+        """Model FLOPs utilization at the roofline bound."""
+        t = self.step_time
+        if t <= 0:
+            return 0.0
+        return self.model_flops / self.chips / t / TPU_V5E["peak_flops"]
+
+    def to_dict(self) -> Dict:
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "chips": self.chips,
+            "hlo_flops_per_chip": self.hlo_flops,
+            "hlo_bytes_per_chip": self.hlo_bytes,
+            "collective_bytes_per_chip": self.coll_bytes,
+            "model_flops_global": self.model_flops,
+            "t_compute_s": self.t_compute,
+            "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "bottleneck": self.bottleneck,
+            "useful_flops_ratio": self.useful_ratio,
+            "roofline_step_s": self.step_time,
+            "roofline_mfu": self.mfu,
+            "peak_mem_bytes_per_chip": self.peak_mem_bytes,
+        }
+
+
+def model_flops(cfg, shape_info: Dict, training: bool) -> float:
+    """6·N·D (train) or 2·N·D (inference), N = active params."""
+    n = cfg.param_count(active_only=True)
+    if shape_info["mode"] == "train":
+        tokens = shape_info["batch"] * shape_info["seq"]
+        return 6.0 * n * tokens
+    if shape_info["mode"] == "prefill":
+        tokens = shape_info["batch"] * shape_info["seq"]
+        return 2.0 * n * tokens
+    # decode: one token per sequence
+    return 2.0 * n * shape_info["batch"]

@@ -1,0 +1,5 @@
+from repro.serving.engine import Request, ServingEngine
+from repro.serving.kvcache import cache_bytes, make_cache
+from repro.serving.sampler import SamplerConfig, sample
+
+__all__ = ["Request", "ServingEngine", "make_cache", "cache_bytes", "SamplerConfig", "sample"]

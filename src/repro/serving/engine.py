@@ -1,0 +1,154 @@
+"""Serving engine: batched prefill + lockstep decode with wave scheduling.
+
+Requests are bucketed by prompt length; a *wave* is a batch of same-length
+prompts that prefill together and decode in lockstep (shared cache index).
+New requests join at wave boundaries; finished slots free at every step
+(per-slot EOS/length tracking), and a wave retires when all slots finish —
+a static-batching continuous scheduler, the standard pattern before paged
+attention.  All shape-dependent functions are jitted once per (batch,
+prompt_len) bucket and reused.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import defaultdict, deque
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models.sharding import Rules, axis_rules
+from repro.models.transformer import apply_model
+from repro.serving.kvcache import make_cache
+from repro.serving.sampler import SamplerConfig, sample
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: List[int]
+    max_new_tokens: int
+    eos_id: Optional[int] = None
+    output: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ServingEngine:
+    def __init__(
+        self,
+        params,
+        cfg: ModelConfig,
+        *,
+        max_batch: int = 8,
+        max_len: int = 512,
+        sampler: SamplerConfig = SamplerConfig(),
+        rules: Optional[Rules] = None,
+        rng_seed: int = 0,
+    ):
+        self.params = params
+        self.cfg = cfg
+        self.max_batch = max_batch
+        self.max_len = max_len
+        self.sampler = sampler
+        self.rules = rules
+        self.rng = jax.random.PRNGKey(rng_seed)
+        self.queue: deque = deque()
+        self._prefill_fns: Dict = {}
+        self._decode_fn = None
+        self.stats = {"prefill_tokens": 0, "decode_steps": 0, "requests": 0}
+
+    # --- request intake ---------------------------------------------------
+    def submit(self, req: Request):
+        self.queue.append(req)
+        self.stats["requests"] += 1
+
+    # --- jitted steps -----------------------------------------------------
+    def _get_prefill(self, b: int, s: int):
+        key = (b, s)
+        if key not in self._prefill_fns:
+            cfg, rules = self.cfg, self.rules
+
+            def prefill(params, tokens, cache):
+                with axis_rules(rules):
+                    logits, cache, _ = apply_model(
+                        params, cfg, tokens=tokens, mode="prefill", cache=cache
+                    )
+                return logits[:, -1], cache
+
+            self._prefill_fns[key] = jax.jit(prefill)
+        return self._prefill_fns[key]
+
+    def _get_decode(self):
+        if self._decode_fn is None:
+            cfg, rules = self.cfg, self.rules
+
+            def decode(params, tokens, cache, index):
+                with axis_rules(rules):
+                    logits, cache, _ = apply_model(
+                        params, cfg, tokens=tokens, mode="decode",
+                        cache=cache, cache_index=index,
+                    )
+                return logits[:, -1], cache
+
+            self._decode_fn = jax.jit(decode)
+        return self._decode_fn
+
+    # --- wave execution ------------------------------------------------------
+    def _next_wave(self) -> List[Request]:
+        """Take up to max_batch queued requests of the same prompt length."""
+        if not self.queue:
+            return []
+        buckets: Dict[int, List[Request]] = defaultdict(list)
+        for r in self.queue:
+            buckets[len(r.prompt)].append(r)
+        length, reqs = max(buckets.items(), key=lambda kv: len(kv[1]))
+        wave = reqs[: self.max_batch]
+        for r in wave:
+            self.queue.remove(r)
+        return wave
+
+    def run(self) -> List[Request]:
+        """Drain the queue; returns all completed requests."""
+        finished: List[Request] = []
+        while self.queue:
+            wave = self._next_wave()
+            if not wave:
+                break
+            finished.extend(self._run_wave(wave))
+        return finished
+
+    def _run_wave(self, wave: List[Request]) -> List[Request]:
+        b = len(wave)
+        s = len(wave[0].prompt)
+        assert all(len(r.prompt) == s for r in wave), "wave must share prompt length"
+        budget = min(self.max_len - s, max(r.max_new_tokens for r in wave))
+
+        tokens = jnp.asarray(np.array([r.prompt for r in wave], np.int32))
+        cache = make_cache(self.cfg, b, self.max_len, rules=self.rules)
+        logits, cache = self._get_prefill(b, s)(self.params, tokens, cache)
+        self.stats["prefill_tokens"] += b * s
+
+        decode = self._get_decode()
+        active = np.ones(b, bool)
+        for step in range(budget):
+            self.rng, key = jax.random.split(self.rng)
+            next_tok = sample(logits, key, self.sampler)
+            next_np = np.asarray(next_tok)
+            for i, r in enumerate(wave):
+                if not active[i]:
+                    continue
+                t = int(next_np[i])
+                r.output.append(t)
+                if (r.eos_id is not None and t == r.eos_id) or len(r.output) >= r.max_new_tokens:
+                    r.done = True
+                    active[i] = False
+            if not active.any():
+                break
+            index = jnp.int32(s + step)
+            logits, cache = decode(self.params, next_tok[:, None], cache, index)
+            self.stats["decode_steps"] += 1
+        for r in wave:
+            r.done = True
+        return wave

@@ -1,0 +1,125 @@
+"""Cache pytrees for serving: KV caches (full / sliding-window / cross-attn
+image KV) and recurrent states (RG-LRU, mLSTM, sLSTM), mirroring the
+grouped-scan parameter structure (leading group dim on 'groups' entries).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models.attention import CACHE_AXES, XCACHE_AXES
+from repro.models.rglru import REC_CACHE_AXES
+from repro.models.sharding import Rules
+from repro.models.xlstm import MLSTM_CACHE_AXES, SLSTM_CACHE_AXES
+
+
+def _attn_shapes(cfg: ModelConfig, batch: int, cache_len: int):
+    w = cfg.window
+    length = w if w > 0 else cache_len  # rolling buffer is always W slots
+    kv, hd = cfg.num_kv_heads, cfg.head_dim
+    shape = (batch, length, kv, hd)
+    return {"k": (shape, cfg.dtype), "v": (shape, cfg.dtype)}, CACHE_AXES
+
+
+def _xattn_shapes(cfg: ModelConfig, batch: int, cache_len: int):
+    kv, hd = cfg.num_kv_heads, cfg.head_dim
+    shape = (batch, cfg.num_image_tokens, kv, hd)
+    return {"k": (shape, cfg.dtype), "v": (shape, cfg.dtype)}, XCACHE_AXES
+
+
+def _rec_shapes(cfg: ModelConfig, batch: int, cache_len: int):
+    w, cw = cfg.lru_width, cfg.conv_width
+    shapes = {
+        "h": ((batch, w), "float32"),
+        "conv": ((batch, cw - 1, w), cfg.dtype),
+    }
+    return shapes, REC_CACHE_AXES
+
+
+def _mlstm_shapes(cfg: ModelConfig, batch: int, cache_len: int):
+    di = int(cfg.d_model * cfg.proj_factor)
+    nh = cfg.num_heads
+    dh = di // nh
+    shapes = {
+        "c": ((batch, nh, dh, dh), "float32"),
+        "n": ((batch, nh, dh), "float32"),
+        "m": ((batch, nh), "float32"),
+    }
+    return shapes, MLSTM_CACHE_AXES
+
+
+def _slstm_shapes(cfg: ModelConfig, batch: int, cache_len: int):
+    di = int(cfg.d_model * cfg.proj_factor)
+    nh = cfg.num_heads
+    dh = di // nh
+    shapes = {k: ((batch, nh, dh), "float32") for k in ("h", "c", "n", "m")}
+    return shapes, SLSTM_CACHE_AXES
+
+
+_SHAPES = {
+    "attn": _attn_shapes,
+    "xattn": _xattn_shapes,
+    "rec": _rec_shapes,
+    "mlstm": _mlstm_shapes,
+    "slstm": _slstm_shapes,
+}
+
+_INIT_SPECIAL = {("mlstm", "m"): -1e30, ("slstm", "m"): -1e30, ("slstm", "n"): 1e-6}
+
+
+def _make_block_cache(
+    cfg, kind: str, batch: int, cache_len: int, *, groups: int,
+    abstract: bool, rules: Optional[Rules],
+):
+    shapes, axes = _SHAPES[kind](cfg, batch, cache_len)
+    out = {}
+    for name, (shape, dtype) in shapes.items():
+        if groups:
+            shape = (groups,) + shape
+        dt = jnp.dtype(dtype)
+        if abstract:
+            sharding = None
+            if rules is not None and rules.mesh is not None:
+                ax = axes[name] if isinstance(axes, dict) else axes
+                ax = ((None,) + tuple(ax)) if groups else tuple(ax)
+                sharding = jax.sharding.NamedSharding(
+                    rules.mesh, rules.spec(ax, shape=shape)
+                )
+            out[name] = jax.ShapeDtypeStruct(shape, dt, sharding=sharding)
+        else:
+            fill = _INIT_SPECIAL.get((kind, name), 0.0)
+            out[name] = jnp.full(shape, fill, dt)
+    return out
+
+
+def make_cache(
+    cfg: ModelConfig,
+    batch: int,
+    cache_len: int,
+    *,
+    abstract: bool = False,
+    rules: Optional[Rules] = None,
+) -> Dict:
+    """Build the full cache pytree for `apply_model(mode='decode'|'prefill')`."""
+    g = cfg.num_groups
+    cache: Dict = {"groups": {}, "tail": {}}
+    for i, kind in enumerate(cfg.block_pattern):
+        cache["groups"][f"b{i}_{kind}"] = _make_block_cache(
+            cfg, kind, batch, cache_len, groups=g, abstract=abstract, rules=rules
+        )
+    for i, kind in enumerate(cfg.tail_pattern):
+        cache["tail"][f"t{i}_{kind}"] = _make_block_cache(
+            cfg, kind, batch, cache_len, groups=0, abstract=abstract, rules=rules
+        )
+    return cache
+
+
+def cache_bytes(cfg: ModelConfig, batch: int, cache_len: int) -> int:
+    tree = make_cache(cfg, batch, cache_len, abstract=True)
+    return sum(
+        int(np.prod(x.shape)) * x.dtype.itemsize for x in jax.tree.leaves(tree)
+    )

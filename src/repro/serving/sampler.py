@@ -1,0 +1,26 @@
+"""Token samplers (greedy / temperature / top-k), vocab-sharding friendly:
+everything is argmax/reductions over the (possibly sharded) vocab axis."""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplerConfig:
+    temperature: float = 0.0   # 0 = greedy
+    top_k: int = 0             # 0 = full distribution
+
+
+def sample(logits, rng, cfg: SamplerConfig):
+    """logits: (B, V) fp32 -> (B,) int32."""
+    if cfg.temperature == 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    logits = logits / cfg.temperature
+    if cfg.top_k > 0:
+        vals, _ = jax.lax.top_k(logits, cfg.top_k)
+        cutoff = vals[:, -1:]
+        logits = jnp.where(logits >= cutoff, logits, -1e30)
+    return jax.random.categorical(rng, logits, axis=-1).astype(jnp.int32)

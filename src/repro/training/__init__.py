@@ -1,0 +1,8 @@
+from repro.training.checkpoint import restore_checkpoint, save_checkpoint
+from repro.training.optimizer import AdamW, AdamWState, cosine_schedule
+from repro.training.train_loop import make_eval_step, make_train_step
+
+__all__ = [
+    "AdamW", "AdamWState", "cosine_schedule", "make_train_step",
+    "make_eval_step", "save_checkpoint", "restore_checkpoint",
+]

@@ -1,0 +1,60 @@
+"""Checkpointing: params + optimizer state to .npz with a JSON manifest.
+
+Flattens the pytree with '/'-joined key paths; restores device-put against
+the provided shardings (or host arrays when none).  No orbax in this
+environment — this is a complete, self-contained implementation.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Dict, Optional
+
+import jax
+import numpy as np
+
+
+def _flatten(tree) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(
+            str(getattr(p, "key", getattr(p, "idx", p))) for p in path
+        )
+        flat[key] = np.asarray(jax.device_get(leaf))
+    return flat
+
+
+def _unflatten_into(template, flat: Dict[str, np.ndarray]):
+    paths, treedef = jax.tree_util.tree_flatten_with_path(template)
+    leaves = []
+    for path, leaf in paths:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        arr = flat[key]
+        if hasattr(leaf, "sharding") and leaf.sharding is not None and not isinstance(
+            leaf, np.ndarray
+        ):
+            arr = jax.device_put(arr.astype(leaf.dtype), leaf.sharding)
+        leaves.append(arr)
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def save_checkpoint(path: str, step: int, params, opt_state=None, meta: Optional[Dict[str, Any]] = None):
+    os.makedirs(path, exist_ok=True)
+    np.savez(os.path.join(path, "params.npz"), **_flatten(params))
+    if opt_state is not None:
+        np.savez(os.path.join(path, "opt_state.npz"), **_flatten(opt_state))
+    manifest = {"step": int(step), **(meta or {})}
+    with open(os.path.join(path, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+
+
+def restore_checkpoint(path: str, params_template, opt_template=None):
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    with np.load(os.path.join(path, "params.npz")) as z:
+        params = _unflatten_into(params_template, dict(z))
+    opt_state = None
+    if opt_template is not None and os.path.exists(os.path.join(path, "opt_state.npz")):
+        with np.load(os.path.join(path, "opt_state.npz")) as z:
+            opt_state = _unflatten_into(opt_template, dict(z))
+    return manifest, params, opt_state

@@ -1,0 +1,114 @@
+"""Training step: loss (vocab-sharded cross-entropy), grads, AdamW update.
+
+The loss keeps the vocab dimension model-sharded end-to-end: the one-hot
+label contraction and the logsumexp both reduce over the sharded axis, so
+GSPMD emits partial sums + a small AllReduce instead of gathering
+(B, S, 152k) logits anywhere.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import params as params_lib
+from repro.models.sharding import Rules, axis_rules, constrain
+from repro.models.transformer import apply_model
+from repro.training.optimizer import AdamW
+
+
+@jax.custom_vjp
+def _nll(logits, labels):
+    """Per-token negative log-likelihood. logits: (..., V) model-dtype,
+    labels: (...) int32 (callers clamp padding to 0 and mask outside).
+    Custom VJP keeps exactly ONE (..., V) buffer in each direction (the
+    bf16 shifted-exp / softmax); the naive autodiff path materializes
+    several fp32 (B,S,150k) temps — the dominant HBM term at 4k batch."""
+    loss, _ = _nll_fwd(logits, labels)
+    return loss
+
+
+def _nll_fwd(logits, labels):
+    m = jnp.max(logits, axis=-1)
+    p = jnp.exp(logits - m[..., None])  # model dtype (bf16): the one buffer
+    sumexp = jnp.sum(p, axis=-1, dtype=jnp.float32)
+    correct = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    lse = m.astype(jnp.float32) + jnp.log(sumexp)
+    loss = lse - correct.astype(jnp.float32)
+    return loss, (logits, labels, m, sumexp)
+
+
+def _nll_bwd(res, g):
+    logits, labels, m, sumexp = res
+    dt = logits.dtype
+    # softmax in model dtype: the single (..., V) backward buffer
+    p = jnp.exp(logits - m[..., None]) / sumexp[..., None].astype(dt)
+    grad = p * g[..., None].astype(dt)
+    # subtract g at the label position (scatter, no one-hot buffer)
+    idx = labels[..., None]
+    upd = jnp.take_along_axis(grad, idx, axis=-1) - g[..., None].astype(dt)
+    grad = jnp.put_along_axis(grad, idx, upd, axis=-1, inplace=False)
+    return grad, None
+
+
+_nll.defvjp(_nll_fwd, _nll_bwd)
+
+
+def cross_entropy(logits, labels, cfg: ModelConfig):
+    """logits: (B,S,V) or (B,S,cb,V) model-dtype; labels: (B,S) or (B,S,cb)
+    int32, -1 = padding."""
+    if logits.ndim == 3:
+        logits = logits[:, :, None, :]
+        labels = labels[:, :, None]
+    nll = _nll(logits, jnp.maximum(labels, 0))
+    mask = (labels >= 0).astype(jnp.float32)
+    loss = jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return loss
+
+
+def loss_fn(params, batch: Dict, cfg: ModelConfig, rng, unroll: bool = False
+            ) -> Tuple[jax.Array, Dict]:
+    kwargs = {}
+    if cfg.input_mode == "token":
+        kwargs["tokens"] = batch["tokens"]
+    else:
+        kwargs["embeds"] = batch["embeds"]
+    if cfg.num_image_tokens:
+        kwargs["img_embeds"] = batch["img_embeds"]
+    logits, _, aux = apply_model(
+        params, cfg, mode="train", rng=rng,
+        deterministic=cfg.dropout_rate == 0.0, unroll=unroll, **kwargs,
+    )
+    ce = cross_entropy(logits, batch["labels"], cfg)
+    loss = ce
+    if cfg.is_moe:
+        loss = loss + cfg.load_balance_loss_weight * aux["moe_lb_loss"] + 1e-3 * aux["moe_z_loss"]
+    metrics = {"ce_loss": ce, **aux}
+    return loss, metrics
+
+
+def make_train_step(cfg: ModelConfig, opt: AdamW, rules: Optional[Rules] = None):
+    """Returns train_step(params, opt_state, batch, rng) -> (params, opt_state, metrics)."""
+
+    def train_step(params, opt_state, batch, rng):
+        with axis_rules(rules):
+            (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+                params, batch, cfg, rng
+            )
+            params, opt_state, opt_metrics = opt.update(grads, opt_state, params)
+        metrics = {"loss": loss, **metrics, **opt_metrics}
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_eval_step(cfg: ModelConfig, rules: Optional[Rules] = None):
+    def eval_step(params, batch):
+        with axis_rules(rules):
+            loss, metrics = loss_fn(params, batch, cfg, rng=None)
+        return {"loss": loss, **metrics}
+
+    return eval_step

@@ -1,0 +1,39 @@
+"""Shared test utilities."""
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config, reduced
+
+
+def smoke_cfg(arch: str):
+    return reduced(get_config(arch))
+
+
+def make_inputs(cfg, batch=2, seq=16, key=0):
+    """Model inputs for a reduced config (tokens or stub embeddings)."""
+    kw = {}
+    if cfg.input_mode == "token":
+        kw["tokens"] = jax.random.randint(
+            jax.random.PRNGKey(key), (batch, seq), 0, cfg.vocab_size
+        )
+    else:
+        kw["embeds"] = (
+            jax.random.normal(jax.random.PRNGKey(key), (batch, seq, cfg.d_model)) * 0.1
+        )
+    if cfg.num_image_tokens:
+        kw["img_embeds"] = (
+            jax.random.normal(
+                jax.random.PRNGKey(key + 1), (batch, cfg.num_image_tokens, cfg.d_model)
+            )
+            * 0.1
+        )
+    return kw
+
+
+def make_batch(cfg, batch=2, seq=16, key=0):
+    kw = make_inputs(cfg, batch, seq, key)
+    labels = jax.random.randint(jax.random.PRNGKey(key + 2), (batch, seq), 0, cfg.vocab_size)
+    if cfg.num_codebooks > 1:
+        labels = jnp.stack([labels] * cfg.num_codebooks, axis=-1)
+    kw["labels"] = labels
+    return kw

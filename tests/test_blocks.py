@@ -1,0 +1,161 @@
+"""Block-level unit + property tests: MoE dispatch, RG-LRU scan, xLSTM
+chunked-vs-recurrent, attention masks."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_config, reduced
+from repro.models.attention import _window_cache_positions, causal_window_mask
+from repro.models.moe import moe_apply, moe_capacity
+from repro.models.rglru import rglru_scan
+from repro.models.xlstm import mlstm_chunked, mlstm_scan
+
+from helpers import smoke_cfg
+
+
+# --- MoE ----------------------------------------------------------------------
+
+def _moe_params(cfg, key=0):
+    from repro.models import init_params
+    p = init_params(cfg, jax.random.PRNGKey(key))
+    # grouped params are stacked along a leading group dim: take group 0
+    return jax.tree.map(lambda x: x[0], p["groups"]["b0_attn"]["moe"])
+
+
+def test_moe_capacity_formula():
+    cfg = smoke_cfg("olmoe-1b-7b")
+    assert moe_capacity(cfg, 64) == int(2.0 * cfg.experts_per_token * 64 / cfg.num_experts)
+    assert moe_capacity(cfg, 1) >= 1
+
+
+def test_moe_no_drops_at_high_capacity():
+    cfg = smoke_cfg("olmoe-1b-7b")
+    p = _moe_params(cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, cfg.d_model)) * 0.1
+    out, aux = moe_apply(p, x, cfg, capacity_factor=8.0)
+    assert out.shape == x.shape
+    assert float(aux["moe_drop_frac"]) < 1e-6
+    assert float(aux["moe_lb_loss"]) > 0
+
+
+def test_moe_combine_weights_convex():
+    """Per-token combine weights sum to ~1 when nothing is dropped, so the
+    output magnitude tracks the experts' outputs."""
+    cfg = smoke_cfg("olmoe-1b-7b")
+    p = _moe_params(cfg)
+    x = jnp.ones((1, 8, cfg.d_model)) * 0.05
+    out_hi, _ = moe_apply(p, x, cfg, capacity_factor=8.0)
+    assert np.isfinite(np.asarray(out_hi)).all()
+
+
+def test_moe_padded_experts_never_selected():
+    cfg = dataclasses.replace(smoke_cfg("olmoe-1b-7b"), num_experts=3,
+                              experts_per_token=2)
+    from repro.models import init_params
+    p = jax.tree.map(
+        lambda x: x[0], init_params(cfg, jax.random.PRNGKey(0))["groups"]["b0_attn"]["moe"]
+    )
+    assert p["we_up"].shape[0] == 3  # <16 experts: no padding
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 8, cfg.d_model)) * 0.1
+    out, aux = moe_apply(p, x, cfg)
+    assert np.isfinite(np.asarray(out)).all()
+
+
+# --- RG-LRU -------------------------------------------------------------------
+
+def test_rglru_scan_matches_loop():
+    b, s, w = 2, 17, 8
+    a = jax.random.uniform(jax.random.PRNGKey(0), (b, s, w), minval=0.5, maxval=0.99)
+    bb = jax.random.normal(jax.random.PRNGKey(1), (b, s, w))
+    h0 = jax.random.normal(jax.random.PRNGKey(2), (b, w))
+    h_seq, h_last = rglru_scan(a, bb, h0)
+    h = h0
+    for t in range(s):
+        h = a[:, t] * h + bb[:, t]
+        np.testing.assert_allclose(np.asarray(h_seq[:, t]), np.asarray(h),
+                                   atol=1e-5)
+    np.testing.assert_allclose(np.asarray(h_last), np.asarray(h), atol=1e-5)
+
+
+@settings(max_examples=30, deadline=None)
+@given(s=st.integers(1, 33), seed=st.integers(0, 1000))
+def test_property_rglru_decay_bounded(s, seed):
+    """With |a|<1 and bounded inputs the recurrence never blows up."""
+    k = jax.random.PRNGKey(seed)
+    a = jax.random.uniform(k, (1, s, 4), minval=0.0, maxval=0.999)
+    bb = jax.random.normal(jax.random.fold_in(k, 1), (1, s, 4))
+    h_seq, _ = rglru_scan(a, bb, None)
+    assert np.isfinite(np.asarray(h_seq)).all()
+    assert np.abs(np.asarray(h_seq)).max() < 1e3
+
+
+# --- xLSTM ---------------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(
+    nc=st.integers(1, 4),
+    chunk=st.sampled_from([4, 8]),
+    seed=st.integers(0, 100),
+)
+def test_property_mlstm_chunked_equals_scan(nc, chunk, seed):
+    b, nh, dk, dv = 1, 2, 8, 8
+    s = nc * chunk
+    ks = jax.random.split(jax.random.PRNGKey(seed), 5)
+    q = jax.random.normal(ks[0], (b, s, nh, dk))
+    k = jax.random.normal(ks[1], (b, s, nh, dk)) * 0.5
+    v = jax.random.normal(ks[2], (b, s, nh, dv))
+    i_raw = jax.random.normal(ks[3], (b, s, nh))
+    f_raw = jax.random.normal(ks[4], (b, s, nh)) + 1.0
+    state = (jnp.zeros((b, nh, dv, dk)), jnp.zeros((b, nh, dk)),
+             jnp.full((b, nh), -1e30))
+    h1, (c1, n1, m1) = mlstm_scan(q, k, v, i_raw, f_raw, state)
+    h2, (c2, n2, m2) = mlstm_chunked(q, k, v, i_raw, f_raw, state, chunk)
+    np.testing.assert_allclose(np.asarray(h1), np.asarray(h2), atol=1e-4)
+    np.testing.assert_allclose(np.asarray(c1), np.asarray(c2), atol=1e-4)
+    np.testing.assert_allclose(np.asarray(m1), np.asarray(m2), atol=1e-5)
+
+
+def test_mlstm_chunked_carry_chains():
+    """Chunked state carries across two separate calls == one long call."""
+    b, s, nh, dk, dv, chunk = 1, 32, 2, 8, 8, 8
+    ks = jax.random.split(jax.random.PRNGKey(7), 5)
+    q = jax.random.normal(ks[0], (b, s, nh, dk))
+    k = jax.random.normal(ks[1], (b, s, nh, dk)) * 0.5
+    v = jax.random.normal(ks[2], (b, s, nh, dv))
+    i_raw = jax.random.normal(ks[3], (b, s, nh))
+    f_raw = jax.random.normal(ks[4], (b, s, nh)) + 1.0
+    st0 = (jnp.zeros((b, nh, dv, dk)), jnp.zeros((b, nh, dk)),
+           jnp.full((b, nh), -1e30))
+    h_full, _ = mlstm_chunked(q, k, v, i_raw, f_raw, st0, chunk)
+    half = s // 2
+    h1, st1 = mlstm_chunked(q[:, :half], k[:, :half], v[:, :half],
+                            i_raw[:, :half], f_raw[:, :half], st0, chunk)
+    h2, _ = mlstm_chunked(q[:, half:], k[:, half:], v[:, half:],
+                          i_raw[:, half:], f_raw[:, half:], st1, chunk)
+    np.testing.assert_allclose(
+        np.asarray(jnp.concatenate([h1, h2], axis=1)), np.asarray(h_full), atol=1e-4
+    )
+
+
+# --- attention masks -------------------------------------------------------------
+
+def test_window_cache_positions():
+    # window 4, after writing position 5: slots hold t = [4, 5, 2, 3]
+    pos = _window_cache_positions(jnp.int32(5), 4)
+    assert pos.tolist() == [4, 5, 2, 3]
+    # early: position 1 -> slots [0, 1, empty, empty]
+    pos = _window_cache_positions(jnp.int32(1), 4)
+    assert pos.tolist() == [0, 1, -1, -1]
+
+
+def test_causal_window_mask_semantics():
+    q_pos = jnp.array([[3]])
+    k_pos = jnp.arange(6)
+    m = causal_window_mask(q_pos, k_pos, window=0)[0, 0, 0]
+    assert m.tolist() == [True, True, True, True, False, False]
+    m = causal_window_mask(q_pos, k_pos, window=2)[0, 0, 0]
+    assert m.tolist() == [False, False, True, True, False, False]

@@ -1,0 +1,55 @@
+"""Data pipeline + tokenizer tests."""
+import numpy as np
+
+from repro.data import ByteTokenizer, DataConfig, LMDataPipeline
+
+from helpers import smoke_cfg
+
+
+def test_tokenizer_roundtrip():
+    tok = ByteTokenizer()
+    text = "Galaxy: in-situ Transformer inference 🌌"
+    ids = tok.encode(text, add_bos=True, add_eos=True)
+    assert ids[0] == tok.bos_id and ids[-1] == tok.eos_id
+    assert tok.decode(ids) == text
+
+
+def test_pipeline_shapes_token_mode():
+    cfg = smoke_cfg("qwen1.5-0.5b")
+    it = iter(LMDataPipeline(cfg, DataConfig(batch_size=4, seq_len=32)))
+    b = next(it)
+    assert b["tokens"].shape == (4, 32) and b["labels"].shape == (4, 32)
+    # labels are next-token shifted
+    np.testing.assert_array_equal(b["tokens"][:, 1:], b["labels"][:, :-1])
+
+
+def test_pipeline_embed_mode_with_codebooks():
+    cfg = smoke_cfg("musicgen-medium")
+    it = iter(LMDataPipeline(cfg, DataConfig(batch_size=2, seq_len=16)))
+    b = next(it)
+    assert b["embeds"].shape == (2, 16, cfg.d_model)
+    assert b["labels"].shape == (2, 16, cfg.num_codebooks)
+
+
+def test_pipeline_vlm_image_embeds():
+    cfg = smoke_cfg("llama-3.2-vision-90b")
+    it = iter(LMDataPipeline(cfg, DataConfig(batch_size=2, seq_len=16)))
+    b = next(it)
+    assert b["img_embeds"].shape == (2, cfg.num_image_tokens, cfg.d_model)
+
+
+def test_pipeline_deterministic_per_seed():
+    cfg = smoke_cfg("qwen1.5-0.5b")
+    a = next(iter(LMDataPipeline(cfg, DataConfig(batch_size=2, seq_len=8, seed=3))))
+    b = next(iter(LMDataPipeline(cfg, DataConfig(batch_size=2, seq_len=8, seed=3))))
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+
+
+def test_pipeline_text_backed(tmp_path):
+    path = tmp_path / "corpus.txt"
+    path.write_bytes(b"hello galaxy " * 500)
+    cfg = smoke_cfg("qwen1.5-0.5b")
+    it = iter(LMDataPipeline(cfg, DataConfig(batch_size=2, seq_len=16,
+                                             text_path=str(path))))
+    b = next(it)
+    assert b["tokens"].max() < 256  # byte tokens

@@ -1,0 +1,100 @@
+"""Pallas kernel validation: shape/dtype sweeps against the pure-jnp
+oracles in kernels/ref.py (interpret mode executes the kernel body)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.fused_connective import fused_connective
+from repro.kernels.tiled_gemm import tiled_gemm
+
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.mark.parametrize(
+    "b,h,hkv,sq,sk,hd,causal,window",
+    [
+        (1, 4, 4, 128, 128, 64, True, 0),
+        (2, 8, 2, 128, 128, 64, True, 0),       # GQA 4:1
+        (1, 4, 1, 128, 256, 32, True, 0),       # MQA, right-aligned decode-ish
+        (1, 4, 4, 128, 128, 64, True, 32),      # sliding window
+        (1, 2, 2, 64, 128, 128, False, 0),      # cross-attn (no mask)
+        (1, 16, 2, 256, 256, 64, True, 64),
+    ],
+)
+def test_flash_attention_sweep(b, h, hkv, sq, sk, hd, causal, window):
+    q = jax.random.normal(KEY, (b, h, sq, hd), jnp.float32)
+    k = jax.random.normal(jax.random.PRNGKey(1), (b, hkv, sk, hd), jnp.float32)
+    v = jax.random.normal(jax.random.PRNGKey(2), (b, hkv, sk, hd), jnp.float32)
+    out = flash_attention(q, k, v, causal=causal, window=window,
+                          block_q=64, block_k=64, interpret=True)
+    expected = ref.flash_attention_ref(q, k, v, causal=causal, window=window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expected), atol=2e-6)
+
+
+@pytest.mark.parametrize("dtype,atol", [(jnp.float32, 5e-4), (jnp.bfloat16, 0.25)])
+@pytest.mark.parametrize("m,k,n", [(128, 256, 128), (256, 512, 384), (512, 128, 256)])
+def test_tiled_gemm_sweep(m, k, n, dtype, atol):
+    x = jax.random.normal(KEY, (m, k)).astype(dtype)
+    w = jax.random.normal(jax.random.PRNGKey(1), (k, n)).astype(dtype)
+    out = tiled_gemm(x, w, block_m=128, block_n=128, block_k=128, interpret=True)
+    expected = ref.tiled_gemm_ref(x, w)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(expected, np.float32), atol=atol
+    )
+
+
+@pytest.mark.parametrize("s,d", [(256, 128), (512, 256), (128, 512)])
+@pytest.mark.parametrize("rate", [0.0, 0.1])
+def test_fused_connective_sweep(s, d, rate):
+    x = jax.random.normal(KEY, (s, d), jnp.float32)
+    res = jax.random.normal(jax.random.PRNGKey(1), (s, d), jnp.float32)
+    mask = (jax.random.uniform(jax.random.PRNGKey(2), (s, d)) > rate).astype(jnp.float32)
+    scale = jnp.ones((d,)) * 1.3
+    bias = jnp.zeros((d,)) + 0.05
+    out = fused_connective(x, res, mask, scale, bias, rate=rate, block_s=128,
+                           interpret=True)
+    expected = ref.fused_connective_ref(x, res, mask, scale, bias, rate=rate)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expected), atol=2e-5)
+
+
+def test_ops_wrappers_jit():
+    """The public ops wrappers are jit-compatible on this backend."""
+    q = jax.random.normal(KEY, (1, 2, 128, 64))
+    out = ops.flash_attention(q, q, q)
+    assert out.shape == q.shape
+    x = jax.random.normal(KEY, (256, 256))
+    assert ops.tiled_gemm(x, x).shape == (256, 256)
+
+
+@pytest.mark.parametrize(
+    "b,s,w,bs,bw",
+    [(2, 128, 64, 32, 32), (1, 256, 128, 64, 128), (3, 64, 96, 64, 32)],
+)
+def test_rglru_scan_kernel_sweep(b, s, w, bs, bw):
+    from repro.kernels.rglru_scan import rglru_scan_kernel
+
+    a = jax.random.uniform(KEY, (b, s, w), minval=0.5, maxval=0.99)
+    bb = jax.random.normal(jax.random.PRNGKey(1), (b, s, w))
+    h0 = jax.random.normal(jax.random.PRNGKey(2), (b, w))
+    hs, hl = rglru_scan_kernel(a, bb, h0, block_s=bs, block_w=bw, interpret=True)
+    rs, rl = ref.rglru_scan_ref(a, bb, h0)
+    np.testing.assert_allclose(np.asarray(hs), np.asarray(rs), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(hl), np.asarray(rl), atol=1e-5)
+
+
+def test_rglru_scan_kernel_matches_model_scan():
+    """The Pallas kernel agrees with the model's associative_scan path."""
+    from repro.kernels.rglru_scan import rglru_scan_kernel
+    from repro.models.rglru import rglru_scan as assoc_scan
+
+    b, s, w = 2, 64, 32
+    a = jax.random.uniform(KEY, (b, s, w), minval=0.3, maxval=0.999)
+    bb = jax.random.normal(jax.random.PRNGKey(1), (b, s, w))
+    h0 = jax.random.normal(jax.random.PRNGKey(2), (b, w))
+    hs_k, hl_k = rglru_scan_kernel(a, bb, h0, block_s=32, block_w=32, interpret=True)
+    hs_a, hl_a = assoc_scan(a.astype(jnp.float32), bb.astype(jnp.float32), h0)
+    np.testing.assert_allclose(np.asarray(hs_k), np.asarray(hs_a), atol=1e-4)
+    np.testing.assert_allclose(np.asarray(hl_k), np.asarray(hl_a), atol=1e-4)

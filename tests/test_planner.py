@@ -1,0 +1,117 @@
+"""Algorithm 1 (heterogeneity + memory aware planning): unit + property
+tests (hypothesis) on the planner's invariants."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.planner import (
+    DeviceProfile,
+    ModelProfile,
+    balanced_partition,
+    memory_aware_balancing,
+    plan,
+)
+
+BERT_L = ModelProfile("bert-l", num_layers=24, num_heads=16, mlp_columns=4096,
+                      m_att=8.4e6, m_mlp=16.8e6)
+
+
+def _devices(caps, budgets):
+    return [DeviceProfile(f"d{i}", c, b) for i, (c, b) in enumerate(zip(caps, budgets))]
+
+
+def test_balanced_partition_proportional():
+    out = balanced_partition(16, [2.0, 1.0, 1.0])
+    assert out.sum() == 16
+    assert out[0] == 8 and out[1] == 4 and out[2] == 4
+
+
+def test_balanced_partition_rounding_preserves_total():
+    out = balanced_partition(16, [1.0, 1.0, 1.0])
+    assert out.sum() == 16
+    assert out.max() - out.min() <= 1
+
+
+def test_plan_homogeneous_equal_split():
+    devs = _devices([1.0] * 4, [1e9] * 4)
+    p = plan(BERT_L, devs)
+    assert p.feasible
+    assert np.all(p.mha == 4)
+    assert np.all(p.mlp == 1024)
+    assert np.allclose(p.seq, 0.25)  # SP equal split (paper §III-C-2)
+
+
+def test_plan_heterogeneous_proportional():
+    devs = _devices([3.0, 1.0], [1e9, 1e9])
+    p = plan(BERT_L, devs)
+    assert p.feasible
+    assert p.mha[0] == 12 and p.mha[1] == 4
+    assert p.mlp[0] == 3072 and p.mlp[1] == 1024
+
+
+def test_memory_rebalancing_shifts_from_oom_device():
+    # device 1 has tiny memory: its share must shift to device 0
+    total_mem = BERT_L.num_layers * (BERT_L.m_att + BERT_L.m_mlp)  # ~0.6 GB
+    devs = _devices([1.0, 1.0], [0.9 * total_mem, 0.2 * total_mem])
+    p = plan(BERT_L, devs)
+    assert p.feasible, p.reason
+    mem = p.memory_per_device(BERT_L)
+    assert mem[0] <= devs[0].memory_budget
+    assert mem[1] <= devs[1].memory_budget
+    # Alg. 1 shifts MLP columns first (finer granularity, line 21): the
+    # memory-starved device ends with strictly fewer columns
+    assert p.mlp[0] > p.mlp[1]
+
+
+def test_plan_fails_when_cluster_too_small():
+    devs = _devices([1.0, 1.0], [1e6, 1e6])  # 1 MB budgets
+    p = plan(BERT_L, devs)
+    assert not p.feasible
+
+
+def test_memory_aware_balancing_noop_when_feasible():
+    units = np.array([8, 8])
+    out = memory_aware_balancing(
+        units, unit_mem=1.0, capacities=[1, 1], budgets=[100, 100],
+        other_mem=np.zeros(2),
+    )
+    assert np.array_equal(out, units)
+
+
+@settings(max_examples=200, deadline=None)
+@given(
+    caps=st.lists(st.floats(0.1, 10.0), min_size=2, max_size=6),
+    total=st.integers(2, 128),
+)
+def test_property_balanced_partition_sums(caps, total):
+    out = balanced_partition(total, caps)
+    assert out.sum() == total
+    assert (out >= 0).all()
+    # monotone: a strictly faster device never gets strictly less
+    for i in range(len(caps)):
+        for j in range(len(caps)):
+            if caps[i] > caps[j]:
+                assert out[i] >= out[j] - 1  # rounding slack of 1 unit
+
+
+@settings(max_examples=100, deadline=None)
+@given(
+    n=st.integers(2, 5),
+    seed=st.integers(0, 10_000),
+    tightness=st.floats(0.3, 3.0),
+)
+def test_property_plan_respects_budgets_or_fails(n, seed, tightness):
+    rng = np.random.default_rng(seed)
+    caps = rng.uniform(0.2, 5.0, n)
+    total_mem = BERT_L.num_layers * (BERT_L.m_att + BERT_L.m_mlp)
+    budgets = rng.uniform(0.1, 1.0, n) * total_mem * tightness
+    p = plan(BERT_L, _devices(caps, budgets))
+    if p.feasible:
+        mem = p.memory_per_device(BERT_L)
+        assert np.all(mem <= budgets + 1e-6)
+        assert p.mha.sum() == BERT_L.num_heads
+        assert p.mlp.sum() == BERT_L.mlp_columns
+    else:
+        # infeasible implies the sum of budgets is (close to) insufficient
+        # or granularity prevented packing; either way no plan leaks OOM
+        assert True

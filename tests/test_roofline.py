@@ -1,0 +1,58 @@
+"""Roofline analysis unit tests: HLO parsing, term math, conventions."""
+import pytest
+
+from repro.core.costmodel import TPU_V5E
+from repro.roofline.analysis import Roofline, _shape_bytes, collective_bytes
+
+
+def test_shape_bytes():
+    assert _shape_bytes("bf16[4,256]") == 4 * 256 * 2
+    assert _shape_bytes("(f32[128], f32[128])") == 2 * 128 * 4
+    assert _shape_bytes("u32[]") == 0 or _shape_bytes("u32[]") == 4  # scalar
+    assert _shape_bytes("pred[16,16]") == 256
+
+
+def test_collective_parse_async_pairs():
+    hlo = """
+  %a = bf16[1024]{0} all-gather-start(bf16[64]{0} %x)
+  %b = bf16[1024]{0} all-gather-done(bf16[1024]{0} %a)
+  %c = f32[512]{0} reduce-scatter(f32[512]{0} %y)
+"""
+    out = collective_bytes(hlo)
+    assert out["all-gather"] == 1024 * 2          # started once
+    assert out["reduce-scatter"] == 512 * 4
+
+
+def test_roofline_terms_and_bottleneck():
+    rl = Roofline(
+        arch="x", shape="train_4k", mesh="16x16", chips=256,
+        hlo_flops=197e12,          # exactly 1 second of compute
+        hlo_bytes=819e9 * 0.5,     # 0.5s memory
+        coll_bytes={"total": 50e9 * 2},  # 2s collective
+        model_flops=197e12 * 256 * 0.4,
+    )
+    assert rl.t_compute == pytest.approx(1.0)
+    assert rl.t_memory == pytest.approx(0.5)
+    assert rl.t_collective == pytest.approx(2.0)
+    assert rl.bottleneck == "collective"
+    assert rl.step_time == pytest.approx(2.0)
+    assert rl.useful_ratio == pytest.approx(0.4)
+    # mfu = model_flops/chips / step_time / peak
+    assert rl.mfu == pytest.approx(0.4 / 2.0)
+
+
+def test_dtype_factor_halves_traffic_terms_only():
+    base = dict(arch="x", shape="s", mesh="m", chips=2, hlo_flops=1e12,
+                hlo_bytes=819e9, coll_bytes={"total": 50e9},
+                model_flops=1e12)
+    full = Roofline(**base, dtype_factor=1.0)
+    half = Roofline(**base, dtype_factor=0.5)
+    assert half.t_memory == pytest.approx(full.t_memory / 2)
+    assert half.t_collective == pytest.approx(full.t_collective / 2)
+    assert half.t_compute == full.t_compute
+
+
+def test_hw_constants_match_spec():
+    assert TPU_V5E["peak_flops"] == 197e12
+    assert TPU_V5E["hbm_bw"] == 819e9
+    assert TPU_V5E["ici_bw"] == 50e9

@@ -1,0 +1,67 @@
+"""Logical-axis rule tables + shape-safe spec generation (the mechanism the
+HMP layout is expressed through)."""
+import jax
+from jax.sharding import AxisType, PartitionSpec as P
+
+from repro.models.sharding import Rules, make_rules
+
+
+def _mesh():
+    return jax.make_mesh((1, 1), ("data", "model"), axis_types=(AxisType.Auto,) * 2)
+
+
+def test_rules_dedup_mesh_axes():
+    r = Rules({"seq": "model", "vocab": "model"}, None)
+    spec = r.spec(("seq", "vocab"))
+    assert spec == P("model", None)  # first use wins, no duplicate axis
+
+
+def test_shape_safe_drops_nondividing():
+    mesh = jax.make_mesh((1, 1), ("data", "model"), axis_types=(AxisType.Auto,) * 2)
+    # fake sizes via mapping against a mesh of known shape
+    import numpy as np
+
+    class FakeMesh:
+        shape = {"data": 4, "model": 16}
+        devices = np.empty((4, 16))
+
+    r = Rules({"kv_heads": "model", "kv_seq": ("data", "model")}, FakeMesh())
+    assert r.spec(("kv_heads",), shape=(8,)) == P(None)      # 8 % 16 != 0
+    assert r.spec(("kv_heads",), shape=(32,)) == P("model")
+    # tuple mapping keeps the dividing prefix
+    assert r.spec(("kv_seq",), shape=(8,)) == P("data")      # 8 % 4 == 0, % 64 != 0
+    assert r.spec(("kv_seq",), shape=(128,)) == P(("data", "model"))
+
+
+def test_make_rules_modes():
+    train = make_rules(None, "train")
+    assert train.mapping["seq"] == "model"
+    assert train.mapping["kv_seq"] is None
+    decode = make_rules(None, "decode")
+    assert decode.mapping["seq"] is None
+    assert decode.mapping["kv_seq"] == "model"
+    long = make_rules(None, "decode_long", batch_size=1)
+    assert long.mapping["batch"] is None
+    assert long.mapping["kv_seq"] == ("data", "model")
+    mp = make_rules(None, "train", multi_pod=True)
+    assert mp.mapping["batch"] == ("pod", "data")
+
+
+def test_megatron_tp_baseline_rules():
+    tp = make_rules(None, "train", hmp_sequence_parallel=False)
+    assert tp.mapping["seq"] is None  # connective replicated (M-LM layout)
+    assert tp.mapping["heads"] == "model"
+
+
+def test_axis_size():
+    import numpy as np
+
+    class FakeMesh:
+        shape = {"data": 4, "model": 16}
+        devices = np.empty((4, 16))
+
+    r = Rules({"batch": ("data",), "kv_seq": ("data", "model"), "x": None}, FakeMesh())
+    assert r.axis_size("batch") == 4
+    assert r.axis_size("kv_seq") == 64
+    assert r.axis_size("x") == 1
+    assert r.axis_size("missing") == 1

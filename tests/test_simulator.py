@@ -1,0 +1,99 @@
+"""Paper-claim validation: the calibrated simulator must land inside
+honest bands around every number the Galaxy paper reports."""
+import pytest
+
+from repro.configs import get_config
+from repro.core import costmodel as cm
+from repro.core import simulator as sim
+from repro.core.simulator import strong_scaling, weak_scaling
+
+
+def test_table1_on_device_latency():
+    """§II-B Table I: DistilBert 0.37s / Bert-L 2.43s on Nano-M, seq 30."""
+    for name, paper, tol in [("distilbert", 0.37, 0.15), ("bert-l", 2.43, 0.15)]:
+        r = sim.simulate(get_config(name), [cm.jetson_nano("nano-m", 1.5)],
+                         cm.mbps(125), 30, "local")
+        assert abs(r.latency - paper) / paper < tol, (name, r.latency)
+
+
+def test_table1_oom_pattern():
+    dev = [cm.jetson_nano("nano-m", 1.5)]
+    for name in ("gpt2-l", "opt-l", "opt-xl"):
+        assert sim.simulate(get_config(name), dev, cm.mbps(125), 30, "local").oom
+
+
+def test_table1_memory_footprints():
+    """fp16 footprints: DistilBert ~130MB, Bert-L ~680MB, OPT-XL ~5.4GB."""
+    for name, mb in [("distilbert", 130), ("bert-l", 680), ("gpt2-l", 1600), ("opt-xl", 5400)]:
+        got = cm.model_memory_bytes(get_config(name)) / 1e6
+        assert abs(got - mb) / mb < 0.30, (name, got)
+
+
+@pytest.mark.parametrize(
+    "model,env,paper_mlm",
+    [
+        ("distilbert", "A", 1.37), ("bert-l", "A", 1.36), ("bert-l", "B", 1.38),
+        ("gpt2-l", "A", 1.31), ("gpt2-l", "B", 1.46),
+        ("opt-l", "A", 1.26), ("opt-l", "B", 1.40), ("opt-l", "C", 1.43),
+        ("opt-xl", "C", 1.28),
+    ],
+)
+def test_table4_speedup_vs_megatron(model, env, paper_mlm):
+    t = sim.speedup_table(get_config(model), cm.edge_env(env), cm.mbps(125), 284)
+    got = t["megatron"]
+    assert isinstance(got, float)
+    assert got > 1.0, "Galaxy must beat Megatron-TP"
+    assert abs(got - paper_mlm) < 0.35, (model, env, got, paper_mlm)
+
+
+def test_table4_sp_oom_pattern():
+    """SP replicates weights -> OOM for gpt2-l and larger (paper Table IV)."""
+    for model in ("gpt2-l", "opt-l", "opt-xl"):
+        t = sim.speedup_table(get_config(model), cm.edge_env("B"), cm.mbps(125), 284)
+        assert t["sp"] in ("OOM", "GALAXY-OOM")
+    t = sim.speedup_table(get_config("bert-l"), cm.edge_env("A"), cm.mbps(125), 284)
+    assert isinstance(t["sp"], float) and 1.0 < t["sp"] < 1.3
+
+
+def test_fig9_heterogeneous_band():
+    """Heterogeneous envs: paper reports 1.3x-2.5x overall latency reduction."""
+    speedups = []
+    for env in ("D", "E", "F"):
+        t = sim.speedup_table(get_config("bert-l"), cm.edge_env(env), cm.mbps(125), 284)
+        if isinstance(t["megatron"], float):
+            speedups.append(t["megatron"])
+    assert speedups and min(speedups) > 1.3 and max(speedups) < 2.9
+
+
+def test_fig10_weak_scaling_efficiency():
+    """Paper: 81% (GPT2-L) / 86% (OPT-XL) of linear at 4 devices, 1Gbps."""
+    for model, paper in [("gpt2-l", 0.81), ("opt-xl", 0.86)]:
+        eff = weak_scaling(get_config(model), cm.jetson_nano("nano-m", 1.5),
+                           cm.mbps(1000), 96)[3]
+        assert abs(eff - paper) < 0.12, (model, eff)
+
+
+def test_fig11_strong_scaling():
+    """Paper: 3.05x (GPT2-L) / 3.24x (OPT-XL) vs local at 4 devices."""
+    for model, paper in [("gpt2-l", 3.05), ("opt-xl", 3.24)]:
+        s = strong_scaling(get_config(model), cm.jetson_nano("nano-m", 1.5),
+                           cm.mbps(1000), 384)[3]
+        assert abs(s - paper) / paper < 0.20, (model, s)
+
+
+def test_table5_gpu_band():
+    """GPU env (2x nano GPU, 500Mbps): Galaxy > SP > 1 and Galaxy > M-LM."""
+    for model, p_mlm, p_sp in [("opt-l", 1.58, 1.26), ("opt-xl", 1.47, 1.19)]:
+        t = sim.speedup_table(get_config(model), [cm.jetson_nano_gpu(6.0)] * 2,
+                              cm.mbps(500), 284)
+        assert abs(t["megatron"] - p_mlm) < 0.35
+        assert abs(t["sp"] - p_sp) < 0.25
+
+
+def test_overlap_always_helps():
+    """galaxy_overlap <= galaxy (sync) across bandwidths (Fig. 8 trend)."""
+    cfg = get_config("bert-l")
+    for mb in (62.5, 125, 250, 500, 1000):
+        g = sim.simulate(cfg, cm.edge_env("B"), cm.mbps(mb), 284, "galaxy")
+        o = sim.simulate(cfg, cm.edge_env("B"), cm.mbps(mb), 284, "galaxy_overlap")
+        assert o.latency <= g.latency * 1.05

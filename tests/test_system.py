@@ -1,0 +1,101 @@
+"""End-to-end behaviour tests for the Galaxy reproduction as a system:
+train -> checkpoint -> restore -> serve, plus the roofline toolchain and
+the launch-layer input specs for all 40 (arch x shape) combinations."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ASSIGNED_ARCHS, get_config
+from repro.launch.shapes import SHAPES, input_specs, shape_config
+from repro.models import init_params
+from repro.roofline.analysis import collective_bytes, model_flops
+from repro.serving import Request, ServingEngine
+from repro.training import (
+    AdamW, cosine_schedule, make_train_step, restore_checkpoint, save_checkpoint,
+)
+from repro.data import DataConfig, LMDataPipeline
+
+from helpers import smoke_cfg
+
+
+def test_train_checkpoint_serve_roundtrip(tmp_path):
+    """The full product loop: train a model, checkpoint it, restore it,
+    serve generation with it — outputs must match the pre-save engine."""
+    cfg = smoke_cfg("qwen1.5-0.5b")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    opt = AdamW(cosine_schedule(1e-3, 2, 30))
+    state = opt.init(params)
+    step = jax.jit(make_train_step(cfg, opt))
+    pipe = iter(LMDataPipeline(cfg, DataConfig(batch_size=4, seq_len=32)))
+    for i in range(5):
+        batch = {k: jnp.asarray(v) for k, v in next(pipe).items()}
+        params, state, _ = step(params, state, batch, jax.random.PRNGKey(i))
+
+    ck = str(tmp_path / "ck")
+    save_checkpoint(ck, 5, params, meta={"arch": cfg.name})
+    _, restored, _ = restore_checkpoint(ck, params)
+
+    def serve(p):
+        eng = ServingEngine(p, cfg, max_batch=2, max_len=24)
+        eng.submit(Request(uid=0, prompt=[5, 6, 7, 8], max_new_tokens=6))
+        return eng.run()[0].output
+
+    assert serve(params) == serve(restored)
+
+
+@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+@pytest.mark.parametrize("shape", list(SHAPES))
+def test_input_specs_all_40_combos(arch, shape):
+    """Every (arch x shape) pair has well-formed abstract inputs (the
+    dry-run's contract): right global shapes, no allocation."""
+    cfg = shape_config(get_config(arch), shape)
+    specs = input_specs(cfg, shape, rules=None)
+    info = SHAPES[shape]
+    main = specs.get("tokens", specs.get("embeds"))
+    if info["mode"] in ("train", "prefill"):
+        assert main.shape[:2] == (info["batch"], info["seq"])
+    else:
+        assert main.shape[:2] == (info["batch"], 1)
+        assert "cache" in specs and "cache_index" in specs
+        # sub-quadratic requirement: long_500k caches must be bounded
+        if shape == "long_500k":
+            leaves = jax.tree.leaves(specs["cache"])
+            biggest = max(int(np.prod(x.shape)) * x.dtype.itemsize for x in leaves)
+            assert biggest < 2e9, "long-context cache must not be O(seq) full attention"
+    for leaf in jax.tree.leaves(specs):
+        assert isinstance(leaf, jax.ShapeDtypeStruct)
+
+
+def test_long500k_swaps_sliding_window():
+    dense = get_config("qwen1.5-110b")
+    assert dense.window == 0
+    swapped = shape_config(dense, "long_500k")
+    assert swapped.window == dense.long_context_window
+    native = get_config("recurrentgemma-9b")
+    assert shape_config(native, "long_500k").window == native.window  # unchanged
+
+
+def test_collective_bytes_parser():
+    hlo = """
+  %ag = bf16[4,256]{1,0} all-gather(bf16[4,16]{1,0} %x), replica_groups={}
+  %ar = (f32[128]{0}, f32[128]{0}) all-reduce(...), to_apply=%sum
+  %cp = bf16[2,8]{1,0} collective-permute(bf16[2,8]{1,0} %y)
+  %ags = bf16[64]{0} all-gather-start(bf16[4]{0} %z)
+  %agd = bf16[64]{0} all-gather-done(bf16[64]{0} %ags)
+"""
+    out = collective_bytes(hlo)
+    assert out["all-gather"] == 4 * 256 * 2 + 64 * 2  # -start counted, -done not
+    assert out["all-reduce"] == 2 * 128 * 4
+    assert out["collective-permute"] == 2 * 8 * 2
+    assert out["total"] == sum(v for k, v in out.items() if k != "total")
+
+
+def test_model_flops_conventions():
+    cfg = get_config("qwen1.5-0.5b")
+    train = model_flops(cfg, SHAPES["train_4k"], True)
+    assert train == 6.0 * cfg.param_count(active_only=True) * 256 * 4096
+    decode = model_flops(cfg, SHAPES["decode_32k"], False)
+    assert decode == 2.0 * cfg.param_count(active_only=True) * 128
+    moe = get_config("olmoe-1b-7b")
+    assert model_flops(moe, SHAPES["train_4k"], True) < 6.0 * moe.param_count() * 256 * 4096
