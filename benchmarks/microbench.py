@@ -79,9 +79,9 @@ def hmp_schedules_multidevice() -> Iterator[Row]:
     CPU ppermute/collectives are emulation-grade; relative numbers only."""
     code = r"""
 import jax, jax.numpy as jnp, time
-from jax.sharding import AxisType
 from repro.core import hmp
-mesh = jax.make_mesh((4,), ('model',), axis_types=(AxisType.Auto,))
+from repro.launch.mesh import make_mesh_compat
+mesh = make_mesh_compat((4,), ('model',))
 p = hmp.init_layer_params(jax.random.PRNGKey(0), 256, 8, 1024)
 x = jax.random.normal(jax.random.PRNGKey(1), (1, 256, 256))
 for name, fn in hmp.SCHEDULES.items():
@@ -108,4 +108,85 @@ for name, fn in hmp.SCHEDULES.items():
                f"vs megatron={base/float(us):.2f}x" if base == base else "")
 
 
-ALL = [kernel_fusion, flash_vs_naive, profiler_blocks, hmp_schedules_multidevice]
+def execplan_uneven() -> Iterator[Row]:
+    """Measured vs simulated latency of the *same* uneven ExecPlan.
+
+    The planner partitions a DistilBert layer over a 3:2:2:1 heterogeneous
+    cluster; the resulting ExecPlan is (a) scored by the simulator (assigned
+    workload and padded SPMD workload) and (b) executed for real through
+    hmp / hmp_ring on 4 forced CPU devices.  Absolute scales differ (host
+    CPU vs simulated Jetsons) — the point is one plan flowing through both.
+    """
+    import dataclasses
+
+    from repro.configs import get_config
+    from repro.core import costmodel, planner
+    from repro.core.execplan import ExecPlan
+    from repro.core.profiler import AnalyticProfiler
+    from repro.core.simulator import simulate_execplan
+
+    seq = 128
+    cfg = dataclasses.replace(get_config("distilbert"), num_layers=1)
+    caps = [3.0, 2.0, 2.0, 1.0]
+    devices = [
+        costmodel.DeviceSpec(f"edge{i}", flops=c * 7.1e9, mem_bw=4.0e9,
+                             memory_budget=1.5e9)
+        for i, c in enumerate(caps)
+    ]
+    link = costmodel.mbps(1000)
+    prof = AnalyticProfiler(cfg, seq)
+    pl = planner.plan(prof.model_profile(), prof.device_profiles(devices))
+    if not pl.feasible:
+        yield ("micro/execplan", float("nan"), f"plan infeasible:{pl.reason}")
+        return
+    eplan = ExecPlan.from_plan(pl, head_dim=cfg.head_dim, d_model=cfg.d_model)
+
+    for name, padded, overlap in [
+        ("sim/execplan_galaxy", False, False),
+        ("sim/execplan_galaxy_overlap", False, True),
+        ("sim/execplan_galaxy_overlap_padded", True, True),
+    ]:
+        r = simulate_execplan(eplan, cfg, devices, link, seq,
+                              overlap=overlap, padded=padded)
+        yield (name, r.latency * 1e6,
+               f"simulated,{eplan.describe()}" if not padded else
+               "simulated,every device runs max(units)")
+
+    code = rf"""
+import jax, jax.numpy as jnp, time
+from repro.core import hmp
+from repro.core.execplan import ExecPlan
+from repro.launch.mesh import make_mesh_compat
+mesh = make_mesh_compat((4,), ('model',))
+eplan = ExecPlan(heads={tuple(eplan.heads)}, columns={tuple(eplan.columns)},
+                 head_dim={eplan.head_dim}, d_model={eplan.d_model})
+p = hmp.init_layer_params(jax.random.PRNGKey(0), eplan.d_model,
+                          eplan.num_heads, eplan.d_ff)
+pp = eplan.pad_layer_params(p)
+x = jax.random.normal(jax.random.PRNGKey(1), (1, {seq}, eplan.d_model))
+for name, overlap in [('hmp', False), ('hmp_ring', True)]:
+    f = jax.jit(lambda p, x, o=overlap: hmp.hmp_layer(p, x, mesh, overlap=o,
+                                                      plan=eplan))
+    out = f(pp, x); jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(10):
+        out = f(pp, x)
+    jax.block_until_ready(out)
+    print(f"{{name}},{{(time.perf_counter()-t0)/10*1e6:.1f}}")
+"""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    proc = subprocess.run([sys.executable, "-c", code], env=env,
+                          capture_output=True, text=True, timeout=600)
+    if proc.returncode != 0:
+        yield ("micro/execplan", float("nan"), "subprocess failed")
+        return
+    for line in proc.stdout.strip().splitlines():
+        name, us = line.split(",")
+        yield (f"micro/execplan_{name}", float(us),
+               f"measured,heads={list(eplan.heads)},cols={list(eplan.columns)}")
+
+
+ALL = [kernel_fusion, flash_vs_naive, profiler_blocks,
+       hmp_schedules_multidevice, execplan_uneven]

@@ -10,6 +10,8 @@ import os
 import sys
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+# repo root, so `from benchmarks import ...` works when run as a script
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 
 
 def _emit(name, us, derived):

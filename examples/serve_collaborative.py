@@ -38,9 +38,9 @@ def hmp_demo():
     """Run the paper's four schedules on 4 devices (subprocess)."""
     code = (
         "import jax, jax.numpy as jnp\n"
-        "from jax.sharding import AxisType\n"
         "from repro.core import hmp\n"
-        "mesh = jax.make_mesh((4,), ('model',), axis_types=(AxisType.Auto,))\n"
+        "from repro.launch.mesh import make_mesh_compat\n"
+        "mesh = make_mesh_compat((4,), ('model',))\n"
         "p = hmp.init_layer_params(jax.random.PRNGKey(0), 128, 8, 512)\n"
         "x = jax.random.normal(jax.random.PRNGKey(1), (1, 64, 128))\n"
         "ref = hmp.reference_layer(p, x)\n"
@@ -54,6 +54,41 @@ def hmp_demo():
     subprocess.run([sys.executable, "-c", code], env=env, check=True)
 
 
+def galaxy_serving_demo():
+    """Uneven planner output served end-to-end: plan -> ExecPlan ->
+    GalaxyHMPExecutor -> wave scheduler, on a 4-device 3:2:2:1 cluster."""
+    code = (
+        "import jax, jax.numpy as jnp\n"
+        "from repro.core import hmp, planner\n"
+        "from repro.core.execplan import ExecPlan\n"
+        "from repro.core.planner import DeviceProfile, ModelProfile\n"
+        "from repro.launch.mesh import make_mesh_compat\n"
+        "from repro.serving import GalaxyHMPExecutor, Request, ServingEngine\n"
+        "caps = [3.0, 2.0, 2.0, 1.0]\n"
+        "model = ModelProfile('demo', 2, 16, 256, 1e6, 2e6)\n"
+        "devs = [DeviceProfile(f'd{i}', c, 1e12) for i, c in enumerate(caps)]\n"
+        "pl = planner.plan(model, devs)\n"
+        "ep = ExecPlan.from_plan(pl, head_dim=8, d_model=128)\n"
+        "print('  plan:', ep.describe())\n"
+        "mesh = make_mesh_compat((4,), ('model',))\n"
+        "layers = hmp.init_stack_params(jax.random.PRNGKey(0), 2, 128, 16, 256)\n"
+        "emb = jax.random.normal(jax.random.PRNGKey(7), (500, 128)) * 0.5\n"
+        "exe = GalaxyHMPExecutor(layers, emb, ep, mesh)\n"
+        "eng = ServingEngine(executor=exe, max_batch=4, max_len=48)\n"
+        "for i in range(4):\n"
+        "    eng.submit(Request(uid=i, prompt=list(range(1 + i, 15 + i)),\n"
+        "                       max_new_tokens=8))\n"
+        "done = eng.run()\n"
+        "print(f'  served {len(done)} requests through the uneven plan; '\n"
+        "      f'stats={eng.stats}')\n"
+    )
+    env = dict(os.environ, PYTHONPATH=SRC,
+               XLA_FLAGS="--xla_force_host_platform_device_count=4")
+    print("Galaxy serving on an uneven 3:2:2:1 plan (planner -> ExecPlan -> engine):")
+    subprocess.run([sys.executable, "-c", code], env=env, check=True)
+
+
 if __name__ == "__main__":
     serve_demo()
     hmp_demo()
+    galaxy_serving_demo()

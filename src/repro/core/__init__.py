@@ -1,4 +1,14 @@
 """Galaxy's primary contribution: hybrid model parallelism (hmp, ring),
-heterogeneity+memory-aware planning (planner, profiler), and the calibrated
+heterogeneity+memory-aware planning (planner, profiler), the execution-plan
+layer that materializes uneven plans (execplan), and the calibrated
 edge-cluster evaluation (costmodel, simulator)."""
-from repro.core import costmodel, hmp, planner, profiler, ring, simulator  # noqa: F401
+from repro.core import (  # noqa: F401
+    costmodel,
+    execplan,
+    hmp,
+    planner,
+    profiler,
+    ring,
+    simulator,
+)
+from repro.core.execplan import ExecPlan  # noqa: F401

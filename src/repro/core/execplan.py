@@ -1,0 +1,250 @@
+"""Execution plans: materialize a ``planner.Plan`` into a runnable program.
+
+The planner (Alg. 1) emits *uneven* integer shard counts — heads per device
+for MHA, columns per device for MLP — but SPMD ``shard_map`` programs need
+equal per-device shapes.  An :class:`ExecPlan` closes that gap with
+pad-and-mask materialization:
+
+* every device's head slice is padded to ``max(heads)`` and every column
+  slice to ``max(columns)`` with **zeroed weights**, so the math stays exact
+  (zero ``wo`` rows / ``w2`` rows contribute nothing to the block output);
+* the sequence axis stays an equal split (§III-C-2), keeping the ring
+  schedule of ``core/ring.py`` aligned across devices.
+
+The same ExecPlan object is consumed by the executor (``core/hmp.py``), the
+serving engine (``serving/galaxy.py``), the simulator
+(``core/simulator.simulate_execplan``) and the microbenchmarks, so a plan is
+scored and executed as *one* artifact.
+
+Note the honesty cost of padding: under SPMD every device executes
+``max(units)`` worth of dense GEMM even if it was assigned fewer units.
+``compute_fractions(padded=True)`` exposes that executed (as opposed to
+assigned) workload so the simulator can score both views.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import planner
+
+# which axis of each layer parameter is partitioned, and by which unit kind;
+# the PartitionSpecs themselves live in hmp.layer_param_specs (identical for
+# even and padded layouts)
+_PARTITIONED_AXES = {
+    "wq": ("head", 1),
+    "wk": ("head", 1),
+    "wv": ("head", 1),
+    "wo": ("head", 0),
+    "w1": ("column", 1),
+    "w2": ("column", 0),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class ExecPlan:
+    """A runnable materialization of one layer-parallel partition.
+
+    heads:   MHA heads assigned per device (sums to the model's head count)
+    columns: MLP columns assigned per device (sums to d_ff)
+    """
+
+    heads: Tuple[int, ...]
+    columns: Tuple[int, ...]
+    head_dim: int
+    d_model: int
+
+    def __post_init__(self):
+        if len(self.heads) != len(self.columns):
+            raise ValueError(
+                f"heads ({len(self.heads)}) and columns ({len(self.columns)}) "
+                "must cover the same device list"
+            )
+        if not self.heads:
+            raise ValueError("ExecPlan needs at least one device")
+        if min(self.heads) < 0 or min(self.columns) < 0:
+            raise ValueError("shard counts must be non-negative")
+        if max(self.heads) == 0 or max(self.columns) == 0:
+            raise ValueError("at least one device must hold a nonzero shard")
+
+    # --- constructors ---------------------------------------------------------
+    @classmethod
+    def from_plan(cls, plan_: planner.Plan, *, head_dim: int, d_model: int) -> "ExecPlan":
+        if not plan_.feasible:
+            raise ValueError(f"cannot materialize an infeasible plan: {plan_.reason}")
+        return cls(
+            heads=tuple(int(a) for a in plan_.mha),
+            columns=tuple(int(b) for b in plan_.mlp),
+            head_dim=head_dim,
+            d_model=d_model,
+        )
+
+    @classmethod
+    def even(cls, n: int, *, num_heads: int, d_ff: int, head_dim: int,
+             d_model: int) -> "ExecPlan":
+        """Equal-split plan (what the pre-ExecPlan executor hard-coded)."""
+        if num_heads % n or d_ff % n:
+            raise ValueError(f"{num_heads} heads / {d_ff} columns do not split evenly over {n}")
+        return cls((num_heads // n,) * n, (d_ff // n,) * n, head_dim, d_model)
+
+    # --- derived geometry -----------------------------------------------------
+    @property
+    def num_devices(self) -> int:
+        return len(self.heads)
+
+    @property
+    def num_heads(self) -> int:
+        return sum(self.heads)
+
+    @property
+    def d_ff(self) -> int:
+        return sum(self.columns)
+
+    @property
+    def pad_heads(self) -> int:
+        """Per-device head slots after padding (= straggler's head count)."""
+        return max(self.heads)
+
+    @property
+    def pad_columns(self) -> int:
+        return max(self.columns)
+
+    @property
+    def padded_heads(self) -> int:
+        """Global head count of the padded parameter arrays."""
+        return self.num_devices * self.pad_heads
+
+    @property
+    def padded_ff(self) -> int:
+        return self.num_devices * self.pad_columns
+
+    @property
+    def is_even(self) -> bool:
+        return len(set(self.heads)) == 1 and len(set(self.columns)) == 1
+
+    def seq_tile(self, seq: int) -> int:
+        """Per-device sequence tile; the SP axis stays an equal split."""
+        n = self.num_devices
+        if seq % n:
+            raise ValueError(
+                f"sequence {seq} does not split evenly over {n} devices; "
+                "pad the sequence to a multiple of the mesh size"
+            )
+        return seq // n
+
+    def padded_seq(self, seq: int) -> int:
+        n = self.num_devices
+        return ((seq + n - 1) // n) * n
+
+    # --- masks ----------------------------------------------------------------
+    def head_mask(self) -> np.ndarray:
+        """Bool (padded_heads,): which padded head slots hold real heads."""
+        m = np.zeros(self.padded_heads, bool)
+        for d, c in enumerate(self.heads):
+            m[d * self.pad_heads : d * self.pad_heads + c] = True
+        return m
+
+    def column_mask(self) -> np.ndarray:
+        m = np.zeros(self.padded_ff, bool)
+        for d, c in enumerate(self.columns):
+            m[d * self.pad_columns : d * self.pad_columns + c] = True
+        return m
+
+    # --- parameter materialization --------------------------------------------
+    def _counts(self, kind: str) -> Tuple[Sequence[int], int]:
+        return (self.heads, self.pad_heads) if kind == "head" else (
+            self.columns, self.pad_columns)
+
+    def _pad_axis(self, arr, kind: str, axis: int):
+        counts, pad = self._counts(kind)
+        shape = list(arr.shape)
+        shape[axis] = len(counts) * pad
+        out = jnp.zeros(shape, arr.dtype)
+        off = 0
+        for d, c in enumerate(counts):
+            if c:
+                src = jax.lax.slice_in_dim(arr, off, off + c, axis=axis)
+                out = jax.lax.dynamic_update_slice_in_dim(out, src, d * pad, axis)
+                off += c
+        return out
+
+    def pad_layer_params(self, p: Dict) -> Dict:
+        """Reference-layout layer params -> device-contiguous padded params.
+
+        Device ``d`` owns heads ``[sum(heads[:d]), sum(heads[:d+1]))`` of the
+        original arrays, placed at slots ``[d*pad_heads, ...)`` of the padded
+        arrays; pad slots are zero, so every block's output is exact.
+        """
+        self._check_reference(p)
+        out = dict(p)
+        for name, (kind, axis) in _PARTITIONED_AXES.items():
+            out[name] = self._pad_axis(p[name], kind, axis)
+        return out
+
+    def _check_reference(self, p: Dict) -> None:
+        if p["wq"].shape[1] != self.num_heads or p["wq"].shape[2] != self.head_dim:
+            raise ValueError(
+                f"params have {p['wq'].shape[1]}x{p['wq'].shape[2]} heads, "
+                f"plan expects {self.num_heads}x{self.head_dim}"
+            )
+        if p["w1"].shape[1] != self.d_ff:
+            raise ValueError(
+                f"params have d_ff={p['w1'].shape[1]}, plan expects {self.d_ff}"
+            )
+
+    def is_padded(self, p: Dict) -> bool:
+        """True if ``p`` is already in this plan's padded layout."""
+        return (
+            p["wq"].shape[1] == self.padded_heads
+            and p["w1"].shape[1] == self.padded_ff
+        )
+
+    def ensure_padded(self, p: Dict) -> Dict:
+        """Accept either layout; return padded params."""
+        if self.is_padded(p):
+            return p
+        return self.pad_layer_params(p)
+
+    # --- scoring hooks --------------------------------------------------------
+    def compute_fractions(self, padded: bool = False):
+        """(mha_frac, mlp_frac): per-device share of each block's total work.
+
+        ``padded=False`` is the planner's assigned workload (paper Eq. 4/5);
+        ``padded=True`` is what the SPMD program actually executes — every
+        device runs ``max(units)`` dense units, zeros included.
+        """
+        if padded:
+            a = np.full(self.num_devices, self.pad_heads / self.num_heads)
+            b = np.full(self.num_devices, self.pad_columns / self.d_ff)
+        else:
+            a = np.asarray(self.heads) / self.num_heads
+            b = np.asarray(self.columns) / self.d_ff
+        return a, b
+
+    def to_planner_plan(self, padded: bool = False) -> planner.Plan:
+        """Re-express as a ``planner.Plan`` for simulator/objective scoring."""
+        n = self.num_devices
+        heads = np.full(n, self.pad_heads) if padded else np.asarray(self.heads)
+        cols = np.full(n, self.pad_columns) if padded else np.asarray(self.columns)
+        return planner.Plan(
+            mha=heads.astype(int), mlp=cols.astype(int),
+            seq=np.full(n, 1.0 / n), feasible=True,
+        )
+
+    def describe(self) -> str:
+        return (
+            f"ExecPlan(n={self.num_devices}, heads={list(self.heads)}"
+            f"->pad {self.pad_heads}, columns={list(self.columns)}"
+            f"->pad {self.pad_columns}, waste="
+            f"{self.padding_waste():.1%})"
+        )
+
+    def padding_waste(self) -> float:
+        """Fraction of executed dense FLOPs that are zero padding."""
+        real = self.num_heads + self.d_ff
+        executed = self.padded_heads + self.padded_ff
+        return 1.0 - real / executed

@@ -13,15 +13,29 @@ each TP block and an AllGather entering it.  Three schedules:
                   2 AllGathers (K and V) per MHA block
 
 All four produce identical math (up to summation order); tests assert
-allclose against the single-device reference.  The production models use
-the GSPMD expression of the same layout (models/sharding.py); this module
-is the paper-exact schedule used for equivalence tests, benchmarks, and as
-the template for the perf work.
+allclose against the single-device reference.
+
+Heterogeneity-aware execution: every entry point takes an optional
+``plan: ExecPlan`` (``core/execplan.py``).  The plan materializes the
+planner's *uneven* head/column assignment as padded-and-masked shards —
+each device's slice padded to ``max(units)`` with zeroed weights, so the
+math stays exact while per-device shapes stay SPMD-equal.  Without a plan
+the layer behaves as before (even split, padded == real).
+
+Serving path: ``hmp_prefill`` / ``hmp_decode`` run a *stack* of layers
+through the Galaxy schedule against a head-sharded KV cache — prefill is
+the full TP/SP + ring program; decode is the single-token degenerate case
+(pure TP with an AllReduce; an SP split of one token is meaningless), which
+is what ``serving/galaxy.py`` drives from the wave scheduler.
+
+The production models use the GSPMD expression of the same layout
+(models/sharding.py); this module is the paper-exact schedule used for
+equivalence tests, benchmarks, and as the template for the perf work.
 """
 from __future__ import annotations
 
 import functools
-from typing import Dict
+from typing import Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -29,6 +43,7 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
+from repro.core.execplan import ExecPlan
 from repro.core.ring import (
     matmul_ring_reducescatter,
     ring_allgather_matmul,
@@ -37,6 +52,9 @@ from repro.core.ring import (
 )
 
 AXIS = "model"
+
+# KV cache entries are (B, cache_len, heads, head_dim), head-sharded
+CACHE_SPEC = P(None, None, AXIS, None)
 
 
 # --- paper-style layer (Fig. 2): post-LN MHA + MLP --------------------------
@@ -59,8 +77,18 @@ def init_layer_params(key, d_model: int, num_heads: int, d_ff: int, dtype=jnp.fl
     }
 
 
+def init_stack_params(key, num_layers: int, d_model: int, num_heads: int,
+                      d_ff: int, dtype=jnp.float32) -> List[Dict]:
+    keys = jax.random.split(key, num_layers)
+    return [init_layer_params(k, d_model, num_heads, d_ff, dtype) for k in keys]
+
+
 def layer_param_specs(megatron: bool = False, sp: bool = False) -> Dict:
-    """PartitionSpecs for the layer params under each parallelism plan."""
+    """PartitionSpecs for the layer params under each parallelism plan.
+
+    Identical for even and ExecPlan-padded layouts: padding only changes the
+    (divisible) global extent of the sharded axes, not which axes shard.
+    """
     if sp:  # weights replicated
         return {k: P() for k in (
             "wq", "wk", "wv", "wo", "w1", "w2", "ln1_s", "ln1_b", "ln2_s", "ln2_b")}
@@ -108,44 +136,78 @@ def reference_layer(p: Dict, x):
     return x
 
 
+def reference_stack(layers: Sequence[Dict], x):
+    for p in layers:
+        x = reference_layer(p, x)
+    return x
+
+
 # --- Galaxy HMP (shard_map) ---------------------------------------------------
 
-def _hmp_layer_local(p, x_loc, *, overlap: bool):
+def _hmp_layer_local(p, x_loc, *, overlap: bool, return_kv: bool = False):
     """Body on one device.  x_loc: (B, S_loc, d) sequence shard; params are
-    head/column shards.  TP blocks see the full sequence; connective blocks
-    see the local shard (paper Fig. 5)."""
+    head/column shards (possibly ExecPlan-padded with zero weights).  TP
+    blocks see the full sequence; connective blocks see the local shard
+    (paper Fig. 5).  With ``return_kv`` also emits this device's K/V head
+    shards over the full sequence, for prefilling a decode cache."""
     ag_mm = ring_allgather_matmul if overlap else sync_allgather_matmul
     mm_rs = matmul_ring_reducescatter if overlap else sync_matmul_reducescatter
 
     d_model = x_loc.shape[-1]
+    s_loc = x_loc.shape[1]
     h_loc, hd = p["wq"].shape[1], p["wq"].shape[2]
 
     # ---- MHA block (TP over heads) ----
     wqkv = jnp.concatenate(
         [p["wq"].reshape(d_model, -1), p["wk"].reshape(d_model, -1),
          p["wv"].reshape(d_model, -1)], axis=1)
-    qkv = ag_mm(x_loc, wqkv, AXIS)  # AllGather ⊗ GEMM1  (B, S, 3*h_loc*hd)
+    qkv = ag_mm(x_loc, wqkv, AXIS, tile_size=s_loc)  # AllGather ⊗ GEMM1
     q, k, v = jnp.split(qkv, 3, axis=-1)
     shape = (*q.shape[:2], h_loc, hd)
-    attn = _attention(q.reshape(shape), k.reshape(shape), v.reshape(shape))
+    k, v = k.reshape(shape), v.reshape(shape)
+    attn = _attention(q.reshape(shape), k, v)
     attn = attn.reshape(*q.shape[:2], h_loc * hd)
-    g_loc = mm_rs(attn, p["wo"].reshape(-1, d_model), AXIS)  # GEMM ⊗ ReduceScatter
+    g_loc = mm_rs(attn, p["wo"].reshape(-1, d_model), AXIS,
+                  tile_size=s_loc)  # GEMM ⊗ ReduceScatter
 
     # ---- connective block (SP over local sequence shard) ----
-    x_loc = _ln(x_loc + g_loc, p["ln1_s"], p["ln1_b"])
+    y_loc = _ln(x_loc + g_loc, p["ln1_s"], p["ln1_b"])
 
     # ---- MLP block (TP over columns) ----
-    h = ag_mm(x_loc, p["w1"], AXIS)
+    h = ag_mm(y_loc, p["w1"], AXIS, tile_size=s_loc)
     h = jax.nn.gelu(h)
-    f_loc = mm_rs(h, p["w2"], AXIS)
+    f_loc = mm_rs(h, p["w2"], AXIS, tile_size=s_loc)
 
     # ---- connective block ----
-    x_loc = _ln(x_loc + f_loc, p["ln2_s"], p["ln2_b"])
-    return x_loc
+    out = _ln(y_loc + f_loc, p["ln2_s"], p["ln2_b"])
+    if return_kv:
+        return out, k, v
+    return out
 
 
-def hmp_layer(p: Dict, x, mesh: Mesh, *, overlap: bool = False):
-    """Galaxy HMP layer. x: (B, S, d) global; S must divide the model axis."""
+def _validate_plan(p: Dict, x, mesh: Mesh, plan: Optional[ExecPlan]):
+    n = mesh.shape[AXIS]
+    if plan is not None:
+        if plan.num_devices != n:
+            raise ValueError(
+                f"plan covers {plan.num_devices} devices but mesh axis "
+                f"'{AXIS}' has {n}"
+            )
+        p = plan.ensure_padded(p)
+        if x is not None:
+            plan.seq_tile(x.shape[1])  # raises if the SP split is uneven
+    return p
+
+
+def hmp_layer(p: Dict, x, mesh: Mesh, *, overlap: bool = False,
+              plan: Optional[ExecPlan] = None):
+    """Galaxy HMP layer.  x: (B, S, d) global; S must divide the model axis.
+
+    ``plan`` materializes an uneven planner assignment: reference-layout
+    params are zero-padded per device (see ``ExecPlan.pad_layer_params``);
+    already-padded params pass through.
+    """
+    p = _validate_plan(p, x, mesh, plan)
     fn = shard_map(
         functools.partial(_hmp_layer_local, overlap=overlap),
         mesh=mesh,
@@ -153,6 +215,107 @@ def hmp_layer(p: Dict, x, mesh: Mesh, *, overlap: bool = False):
         out_specs=P(None, AXIS, None),
     )
     return fn(p, x)
+
+
+# --- multi-layer serving path: prefill + single-token decode ------------------
+
+def make_kv_cache(batch: int, cache_len: int, num_layers: int, mesh: Mesh,
+                  plan: ExecPlan, dtype=jnp.float32) -> List[Dict]:
+    """Head-sharded KV cache for a stack of HMP layers.
+
+    Each layer holds k/v of global shape (B, cache_len, padded_heads, hd);
+    the head axis carries the plan's padded layout, so cache shards line up
+    with the weight shards and padded head slots stay zero forever.  The
+    sequence axis is unsharded — cache_len only needs to fit the (padded)
+    prefill length plus decode steps.
+    """
+    shape = (batch, cache_len, plan.padded_heads, plan.head_dim)
+    sharding = NamedSharding(mesh, CACHE_SPEC)
+    return [
+        {"k": jax.device_put(jnp.zeros(shape, dtype), sharding),
+         "v": jax.device_put(jnp.zeros(shape, dtype), sharding)}
+        for _ in range(num_layers)
+    ]
+
+
+def _prefill_layer_local(p, x_loc, ck, cv, *, overlap: bool):
+    y_loc, k, v = _hmp_layer_local(p, x_loc, overlap=overlap, return_kv=True)
+    ck = jax.lax.dynamic_update_slice(ck, k, (0, 0, 0, 0))
+    cv = jax.lax.dynamic_update_slice(cv, v, (0, 0, 0, 0))
+    return y_loc, ck, cv
+
+
+def hmp_prefill(layers: Sequence[Dict], x, mesh: Mesh, cache: List[Dict],
+                *, plan: ExecPlan, overlap: bool = False):
+    """Run a stack of HMP layers over a prompt, filling the KV cache.
+
+    x: (B, S, d) with S a multiple of the mesh size (pad the prompt; causal
+    masking keeps positions < S_real exact).  Returns (y, cache).
+    """
+    layers = [_validate_plan(p, x, mesh, plan) for p in layers]
+    fn = shard_map(
+        functools.partial(_prefill_layer_local, overlap=overlap),
+        mesh=mesh,
+        in_specs=(layer_param_specs(), P(None, AXIS, None), CACHE_SPEC, CACHE_SPEC),
+        out_specs=(P(None, AXIS, None), CACHE_SPEC, CACHE_SPEC),
+    )
+    new_cache = []
+    for p, c in zip(layers, cache):
+        x, ck, cv = fn(p, x, c["k"], c["v"])
+        new_cache.append({"k": ck, "v": cv})
+    return x, new_cache
+
+
+def _decode_layer_local(p, x, ck, cv, index):
+    """Single-token TP step on one device.  x: (B, 1, d) replicated; the SP
+    axis is degenerate at one token, so connective blocks run redundantly and
+    each TP block exits through an AllReduce (psum) instead of the ring.
+    Writes this step's K/V into the local cache shard *before* attending, so
+    position ``index`` is always valid."""
+    d_model = x.shape[-1]
+    h_loc, hd = p["wq"].shape[1], p["wq"].shape[2]
+    cache_len = ck.shape[1]
+
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k_new = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v_new = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    ck = jax.lax.dynamic_update_slice(ck, k_new, (0, index, 0, 0))
+    cv = jax.lax.dynamic_update_slice(cv, v_new, (0, index, 0, 0))
+
+    scores = jnp.einsum("bqhd,bthd->bhqt", q, ck).astype(jnp.float32) / np.sqrt(hd)
+    valid = jnp.arange(cache_len) <= index
+    scores = jnp.where(valid[None, None, None, :], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(cv.dtype)
+    attn = jnp.einsum("bhqt,bthd->bqhd", probs, cv).reshape(*x.shape[:2], h_loc * hd)
+    g = jax.lax.psum(attn @ p["wo"].reshape(-1, d_model), AXIS)
+    x = _ln(x + g, p["ln1_s"], p["ln1_b"])
+
+    h = jax.nn.gelu(jnp.einsum("bsd,df->bsf", x, p["w1"]))
+    f = jax.lax.psum(jnp.einsum("bsf,fd->bsd", h, p["w2"]), AXIS)
+    x = _ln(x + f, p["ln2_s"], p["ln2_b"])
+    return x, ck, cv
+
+
+def hmp_decode(layers: Sequence[Dict], x, mesh: Mesh, cache: List[Dict],
+               index, *, plan: ExecPlan):
+    """One decode step for a stack of HMP layers against the KV cache.
+
+    x: (B, 1, d) current-token embedding (replicated); index: scalar int32
+    absolute position of this token.  Returns (y, cache) with y replicated.
+    """
+    layers = [_validate_plan(p, None, mesh, plan) for p in layers]
+    fn = shard_map(
+        _decode_layer_local,
+        mesh=mesh,
+        in_specs=(layer_param_specs(), P(), CACHE_SPEC, CACHE_SPEC, P()),
+        out_specs=(P(), CACHE_SPEC, CACHE_SPEC),
+    )
+    index = jnp.asarray(index, jnp.int32)
+    new_cache = []
+    for p, c in zip(layers, cache):
+        x, ck, cv = fn(p, x, c["k"], c["v"], index)
+        new_cache.append({"k": ck, "v": cv})
+    return x, new_cache
 
 
 # --- Megatron-LM TP baseline -----------------------------------------------
@@ -176,7 +339,8 @@ def _megatron_layer_local(p, x):
     return x
 
 
-def megatron_layer(p: Dict, x, mesh: Mesh):
+def megatron_layer(p: Dict, x, mesh: Mesh, *, plan: Optional[ExecPlan] = None):
+    p = _validate_plan(p, None, mesh, plan)
     fn = shard_map(
         _megatron_layer_local,
         mesh=mesh,
@@ -215,7 +379,8 @@ def _sp_layer_local(p, x_loc):
     return x_loc
 
 
-def sp_layer(p: Dict, x, mesh: Mesh):
+def sp_layer(p: Dict, x, mesh: Mesh, *, plan: Optional[ExecPlan] = None):
+    # SP replicates weights: an uneven TP plan does not apply
     fn = shard_map(
         _sp_layer_local,
         mesh=mesh,
@@ -226,8 +391,8 @@ def sp_layer(p: Dict, x, mesh: Mesh):
 
 
 SCHEDULES = {
-    "hmp": lambda p, x, mesh: hmp_layer(p, x, mesh, overlap=False),
-    "hmp_ring": lambda p, x, mesh: hmp_layer(p, x, mesh, overlap=True),
-    "megatron": megatron_layer,
-    "sp": sp_layer,
+    "hmp": lambda p, x, mesh, **kw: hmp_layer(p, x, mesh, overlap=False, **kw),
+    "hmp_ring": lambda p, x, mesh, **kw: hmp_layer(p, x, mesh, overlap=True, **kw),
+    "megatron": lambda p, x, mesh, **kw: megatron_layer(p, x, mesh, **kw),
+    "sp": lambda p, x, mesh, **kw: sp_layer(p, x, mesh, **kw),
 }

@@ -12,10 +12,18 @@ Two primitives, mirroring the paper's Fig. 6 / Fig. 7:
 * ``ring_allgather_matmul``   — AllGather ⊗ GEMM1 (entering a TP block)
 * ``matmul_ring_reducescatter`` — GEMM2 ⊗ ReduceScatter (exiting a TP block)
 
+Both take an explicit ``tile_size`` (the per-device sequence tile, i.e. the
+``ExecPlan.seq_tile``) instead of assuming an implicit equal split of the
+global sequence.  Shape mismatches raise ``ValueError`` at trace time — a
+Python ``assert`` would vanish under ``-O`` and produce an opaque XLA shape
+error for jit users.
+
 Both are bitwise-consistent with the unoverlapped collective versions up to
 floating-point summation order (the ring fixes a deterministic order).
 """
 from __future__ import annotations
+
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -25,56 +33,88 @@ def _perm(axis_size: int, shift: int = 1):
     return [(i, (i + shift) % axis_size) for i in range(axis_size)]
 
 
-def ring_allgather_matmul(x_local, w_local, axis_name: str):
+def _axis_size(axis_name: str) -> int:
+    # jax.lax.axis_size is missing from older jax; psum of a literal 1
+    # constant-folds to the (static) axis size on every version.
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(axis_name)
+    return jax.lax.psum(1, axis_name)
+
+
+def ring_allgather_matmul(x_local, w_local, axis_name: str,
+                          *, tile_size: Optional[int] = None):
     """Overlapped computation of ``all_gather(x, seq) @ w_local``.
 
     x_local: (B, S_loc, d)   — this device's sequence tile (paper's H_i)
     w_local: (d, F_loc)      — this device's column shard (paper's W_i^D)
-    returns: (B, D*S_loc, F_loc) — full-sequence activation, local columns.
+    tile_size: sequence rows per ring tile; defaults to ``S_loc`` and must
+               equal it (every device contributes one tile per ring step).
+    returns: (B, D*tile_size, F_loc) — full-sequence activation, local columns.
 
     Step r computes the GEMM for the tile received r hops ago while the next
     tile is in flight; the final step does no communication (paper §III-D-1).
     """
-    d = jax.lax.axis_size(axis_name)
+    d = _axis_size(axis_name)
     idx = jax.lax.axis_index(axis_name)
     b, s_loc, _ = x_local.shape
+    if tile_size is None:
+        tile_size = s_loc
+    elif tile_size != s_loc:
+        raise ValueError(
+            f"local sequence tile is {s_loc} rows but tile_size={tile_size}; "
+            "the ring AllGather moves whole local tiles"
+        )
     f_loc = w_local.shape[1]
 
-    out = jnp.zeros((b, d * s_loc, f_loc), x_local.dtype)
+    out = jnp.zeros((b, d * tile_size, f_loc), x_local.dtype)
     tile = x_local
     for r in range(d):
         src = jnp.mod(idx - r, d)  # owner of the tile we hold at step r
         part = jnp.einsum("bsd,df->bsf", tile, w_local)
-        out = jax.lax.dynamic_update_slice(out, part, (0, src * s_loc, 0))
+        out = jax.lax.dynamic_update_slice(out, part, (0, src * tile_size, 0))
         if r != d - 1:
             # send current tile forward; receive the next from the ring
             tile = jax.lax.ppermute(tile, axis_name, _perm(d))
     return out
 
 
-def matmul_ring_reducescatter(h_local, w_local, axis_name: str):
+def matmul_ring_reducescatter(h_local, w_local, axis_name: str,
+                              *, tile_size: Optional[int] = None):
     """Overlapped computation of ``psum_scatter(h_local @ w_local, seq)``.
 
     h_local: (B, S, F_loc)   — full sequence, this device's column shard (E_i)
     w_local: (F_loc, d)      — row shard of the second GEMM (W_i^E)
-    returns: (B, S/D, d)     — this device's sequence tile of the summed output.
+    tile_size: rows of the output tile each device ends up owning; defaults
+               to ``S // D`` and must satisfy ``D * tile_size == S``.
+    returns: (B, tile_size, d) — this device's sequence tile of the summed
+             output.
 
     Schedule (paper §III-D-2): at step r device i GEMMs its tile
     (i - r + D - 1) mod D and adds the partial sum arriving from its
     predecessor, which processed the same tile one step earlier.  After D
     steps device i owns the fully-reduced tile i.
     """
-    d = jax.lax.axis_size(axis_name)
+    d = _axis_size(axis_name)
     idx = jax.lax.axis_index(axis_name)
     b, s, _ = h_local.shape
-    assert s % d == 0, f"sequence {s} must divide over ring of {d}"
-    s_loc = s // d
+    if tile_size is None:
+        if s % d:
+            raise ValueError(
+                f"sequence {s} does not divide over a ring of {d} devices; "
+                "pass tile_size (or pad the sequence to a multiple of the mesh)"
+            )
+        tile_size = s // d
+    elif d * tile_size != s:
+        raise ValueError(
+            f"tile_size={tile_size} x {d} devices != sequence {s}; the ring "
+            "ReduceScatter consumes exactly one tile per device per step"
+        )
 
     acc = None
     for r in range(d):
         t = jnp.mod(idx - r + d - 1, d)  # tile index to process this step
         tile = jax.lax.dynamic_slice(
-            h_local, (0, t * s_loc, 0), (b, s_loc, h_local.shape[2])
+            h_local, (0, t * tile_size, 0), (b, tile_size, h_local.shape[2])
         )
         part = jnp.einsum("bsf,fd->bsd", tile, w_local)
         if acc is None:
@@ -86,11 +126,26 @@ def matmul_ring_reducescatter(h_local, w_local, axis_name: str):
 
 # --- unoverlapped references (the paper's "sync" baseline schedule) -----------
 
-def sync_allgather_matmul(x_local, w_local, axis_name: str):
+def sync_allgather_matmul(x_local, w_local, axis_name: str,
+                          *, tile_size: Optional[int] = None):
+    if tile_size is not None and tile_size != x_local.shape[1]:
+        raise ValueError(
+            f"local sequence tile is {x_local.shape[1]} rows but "
+            f"tile_size={tile_size}"
+        )
     xg = jax.lax.all_gather(x_local, axis_name, axis=1, tiled=True)
     return jnp.einsum("bsd,df->bsf", xg, w_local)
 
 
-def sync_matmul_reducescatter(h_local, w_local, axis_name: str):
+def sync_matmul_reducescatter(h_local, w_local, axis_name: str,
+                              *, tile_size: Optional[int] = None):
+    d = _axis_size(axis_name)
+    s = h_local.shape[1]
+    if (tile_size is None and s % d) or (
+            tile_size is not None and d * tile_size != s):
+        raise ValueError(
+            f"sequence {s} does not split into {d} equal scatter tiles"
+            + (f" of {tile_size}" if tile_size is not None else "")
+        )
     out = jnp.einsum("bsf,fd->bsd", h_local, w_local)
     return jax.lax.psum_scatter(out, axis_name, scatter_dimension=1, tiled=True)

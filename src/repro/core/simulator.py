@@ -22,6 +22,7 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.core import costmodel, planner
 from repro.core.costmodel import DeviceSpec, LinkSpec
+from repro.core.execplan import ExecPlan
 from repro.core.profiler import AnalyticProfiler
 
 OOM = float("inf")
@@ -63,7 +64,16 @@ def simulate(
     link: LinkSpec,
     seq: int,
     schedule: str,
+    plan: Optional[planner.Plan] = None,
 ) -> SimResult:
+    """Score one schedule on a simulated edge cluster.
+
+    ``plan`` (galaxy schedules only) scores an externally supplied partition
+    — e.g. one re-expressed from an ``ExecPlan`` — instead of re-running the
+    planner, so the simulator and the real executor consume the *same* plan.
+    """
+    if plan is not None and schedule not in ("galaxy", "galaxy_overlap"):
+        raise ValueError(f"plan= only applies to galaxy schedules, not {schedule!r}")
     d_n = len(devices)
     prof = AnalyticProfiler(cfg, seq)
     p = prof.prof
@@ -111,13 +121,24 @@ def simulate(
     if schedule in ("galaxy", "galaxy_overlap"):
         dev_profiles = prof.device_profiles(devices)
         model_profile = prof.model_profile()
-        pl = planner.plan(model_profile, dev_profiles)
-        per_dev = pl.memory_per_device(model_profile) + _embed_bytes(cfg) / d_n
+        pl = plan if plan is not None else planner.plan(model_profile, dev_profiles)
+        if len(pl.mha) != d_n:
+            raise ValueError(
+                f"plan covers {len(pl.mha)} devices, cluster has {d_n}"
+            )
+
+        # fractions vs the *model's* totals, not the plan's sum: identical for
+        # planner output (counts sum to the totals) but also correct for
+        # padded ExecPlans, where every device executes max(units).
+        a_frac = pl.mha / model_profile.num_heads
+        b_frac = pl.mlp / model_profile.mlp_columns
+        per_dev = (
+            model_profile.num_layers
+            * (model_profile.m_att * a_frac + model_profile.m_mlp * b_frac)
+            + _embed_bytes(cfg) / d_n
+        )
         if not pl.feasible or np.any(per_dev > budgets):
             return SimResult(OOM, per_dev)
-
-        a_frac = pl.mha / pl.mha.sum()
-        b_frac = pl.mlp / pl.mlp.sum()
         # split MHA compute: QKV+WO GEMMs (overlappable) vs attention core
         hd, h, kv, dm = cfg.head_dim, cfg.num_heads, cfg.num_kv_heads, cfg.d_model
         qkv_flops = 2 * seq * dm * (h * hd + 2 * kv * hd)
@@ -156,6 +177,34 @@ def simulate(
         )
 
     raise ValueError(schedule)
+
+
+def simulate_execplan(
+    eplan: ExecPlan,
+    cfg: ModelConfig,
+    devices: Sequence[DeviceSpec],
+    link: LinkSpec,
+    seq: int,
+    *,
+    overlap: bool = True,
+    padded: bool = False,
+) -> SimResult:
+    """Score the exact plan the executor runs (``core/execplan.ExecPlan``).
+
+    ``padded=False`` scores the planner's assigned workload (paper Eq. 4/5);
+    ``padded=True`` scores the SPMD pad-and-mask execution, where every
+    device runs ``max(units)`` dense units — the price of expressing uneven
+    shards as equal-shaped shards.  Comparing the two quantifies the padding
+    overhead of a given plan; ``benchmarks/microbench.py`` reports both next
+    to the measured wall time of the same plan.
+    """
+    if eplan.num_devices != len(devices):
+        raise ValueError(
+            f"plan covers {eplan.num_devices} devices, cluster has {len(devices)}"
+        )
+    schedule = "galaxy_overlap" if overlap else "galaxy"
+    return simulate(cfg, devices, link, seq, schedule,
+                    plan=eplan.to_planner_plan(padded=padded))
 
 
 def speedup_table(

@@ -1,5 +1,9 @@
-from repro.serving.engine import Request, ServingEngine
+from repro.serving.engine import Request, ServingEngine, TransformerExecutor
+from repro.serving.galaxy import GalaxyHMPExecutor
 from repro.serving.kvcache import cache_bytes, make_cache
 from repro.serving.sampler import SamplerConfig, sample
 
-__all__ = ["Request", "ServingEngine", "make_cache", "cache_bytes", "SamplerConfig", "sample"]
+__all__ = [
+    "Request", "ServingEngine", "TransformerExecutor", "GalaxyHMPExecutor",
+    "make_cache", "cache_bytes", "SamplerConfig", "sample",
+]

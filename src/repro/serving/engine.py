@@ -7,6 +7,12 @@ New requests join at wave boundaries; finished slots free at every step
 a static-batching continuous scheduler, the standard pattern before paged
 attention.  All shape-dependent functions are jitted once per (batch,
 prompt_len) bucket and reused.
+
+The engine is model-agnostic: it drives an *executor* exposing
+``make_cache`` / ``prefill`` / ``decode``.  ``TransformerExecutor`` (default)
+runs the production GSPMD model zoo; ``serving.galaxy.GalaxyHMPExecutor``
+runs the paper-exact HMP schedule under an uneven ``ExecPlan`` on a
+multi-device mesh — same wave scheduler, different parallel program.
 """
 from __future__ import annotations
 
@@ -35,37 +41,21 @@ class Request:
     done: bool = False
 
 
-class ServingEngine:
-    def __init__(
-        self,
-        params,
-        cfg: ModelConfig,
-        *,
-        max_batch: int = 8,
-        max_len: int = 512,
-        sampler: SamplerConfig = SamplerConfig(),
-        rules: Optional[Rules] = None,
-        rng_seed: int = 0,
-    ):
+class TransformerExecutor:
+    """Default executor: the GSPMD model zoo (models/transformer.py)."""
+
+    def __init__(self, params, cfg: ModelConfig, rules: Optional[Rules] = None):
         self.params = params
         self.cfg = cfg
-        self.max_batch = max_batch
-        self.max_len = max_len
-        self.sampler = sampler
         self.rules = rules
-        self.rng = jax.random.PRNGKey(rng_seed)
-        self.queue: deque = deque()
         self._prefill_fns: Dict = {}
         self._decode_fn = None
-        self.stats = {"prefill_tokens": 0, "decode_steps": 0, "requests": 0}
 
-    # --- request intake ---------------------------------------------------
-    def submit(self, req: Request):
-        self.queue.append(req)
-        self.stats["requests"] += 1
+    def make_cache(self, batch: int, max_len: int):
+        return make_cache(self.cfg, batch, max_len, rules=self.rules)
 
-    # --- jitted steps -----------------------------------------------------
-    def _get_prefill(self, b: int, s: int):
+    def prefill(self, tokens, cache):
+        b, s = tokens.shape
         key = (b, s)
         if key not in self._prefill_fns:
             cfg, rules = self.cfg, self.rules
@@ -78,9 +68,9 @@ class ServingEngine:
                 return logits[:, -1], cache
 
             self._prefill_fns[key] = jax.jit(prefill)
-        return self._prefill_fns[key]
+        return self._prefill_fns[key](self.params, tokens, cache)
 
-    def _get_decode(self):
+    def decode(self, tokens, cache, index):
         if self._decode_fn is None:
             cfg, rules = self.cfg, self.rules
 
@@ -93,7 +83,42 @@ class ServingEngine:
                 return logits[:, -1], cache
 
             self._decode_fn = jax.jit(decode)
-        return self._decode_fn
+        return self._decode_fn(self.params, tokens, cache, index)
+
+
+class ServingEngine:
+    def __init__(
+        self,
+        params=None,
+        cfg: Optional[ModelConfig] = None,
+        *,
+        executor=None,
+        max_batch: int = 8,
+        max_len: int = 512,
+        sampler: SamplerConfig = SamplerConfig(),
+        rules: Optional[Rules] = None,
+        rng_seed: int = 0,
+    ):
+        if executor is None:
+            if params is None or cfg is None:
+                raise ValueError("pass either (params, cfg) or an executor")
+            executor = TransformerExecutor(params, cfg, rules)
+        elif params is not None or cfg is not None or rules is not None:
+            raise ValueError(
+                "params/cfg/rules belong to the executor; pass one or the other"
+            )
+        self.executor = executor
+        self.max_batch = max_batch
+        self.max_len = max_len
+        self.sampler = sampler
+        self.rng = jax.random.PRNGKey(rng_seed)
+        self.queue: deque = deque()
+        self.stats = {"prefill_tokens": 0, "decode_steps": 0, "requests": 0}
+
+    # --- request intake ---------------------------------------------------
+    def submit(self, req: Request):
+        self.queue.append(req)
+        self.stats["requests"] += 1
 
     # --- wave execution ------------------------------------------------------
     def _next_wave(self) -> List[Request]:
@@ -105,8 +130,10 @@ class ServingEngine:
             buckets[len(r.prompt)].append(r)
         length, reqs = max(buckets.items(), key=lambda kv: len(kv[1]))
         wave = reqs[: self.max_batch]
-        for r in wave:
-            self.queue.remove(r)
+        # one-pass rebuild (deque.remove in a loop is O(n^2) and reorders
+        # FIFO ties badly under load)
+        taken = {id(r) for r in wave}
+        self.queue = deque(r for r in self.queue if id(r) not in taken)
         return wave
 
     def run(self) -> List[Request]:
@@ -126,11 +153,10 @@ class ServingEngine:
         budget = min(self.max_len - s, max(r.max_new_tokens for r in wave))
 
         tokens = jnp.asarray(np.array([r.prompt for r in wave], np.int32))
-        cache = make_cache(self.cfg, b, self.max_len, rules=self.rules)
-        logits, cache = self._get_prefill(b, s)(self.params, tokens, cache)
+        cache = self.executor.make_cache(b, self.max_len)
+        logits, cache = self.executor.prefill(tokens, cache)
         self.stats["prefill_tokens"] += b * s
 
-        decode = self._get_decode()
         active = np.ones(b, bool)
         for step in range(budget):
             self.rng, key = jax.random.split(self.rng)
@@ -147,7 +173,7 @@ class ServingEngine:
             if not active.any():
                 break
             index = jnp.int32(s + step)
-            logits, cache = decode(self.params, next_tok[:, None], cache, index)
+            logits, cache = self.executor.decode(next_tok[:, None], cache, index)
             self.stats["decode_steps"] += 1
         for r in wave:
             r.done = True

@@ -1,0 +1,83 @@
+"""Galaxy HMP executor: serve through the paper-exact schedule.
+
+Bridges the wave scheduler (``serving/engine.py``) and the heterogeneity-
+aware HMP executor (``core/hmp.py``): prefill runs the full TP/SP + ring
+program sequence-sharded over the mesh, decode runs the single-token TP
+step against the head-sharded KV cache — both under the same uneven
+``ExecPlan`` the planner produced.
+
+Prompts whose length does not divide the mesh are right-padded to the next
+multiple (token 0); causal masking keeps all real positions exact, and each
+decode step overwrites its own cache slot before attending, so the padded
+prefill rows are never read.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh
+
+from repro.core import hmp
+from repro.core.execplan import ExecPlan
+
+
+class GalaxyHMPExecutor:
+    """Executor protocol (make_cache / prefill / decode) over HMP layers.
+
+    layers: stack of layer params in *reference* layout (init_layer_params);
+            padded once here via ``plan.pad_layer_params``.
+    embed:  (vocab, d_model) tied embedding / unembedding table.
+    """
+
+    def __init__(self, layers: Sequence[Dict], embed, plan: ExecPlan,
+                 mesh: Mesh, *, overlap: bool = True):
+        self.plan = plan
+        self.mesh = mesh
+        self.overlap = overlap
+        self.layers = [plan.ensure_padded(p) for p in layers]
+        self.embed = jnp.asarray(embed)
+        self._prefill_fns: Dict = {}
+        self._decode_fn = None
+
+    # --- executor protocol ----------------------------------------------------
+    def make_cache(self, batch: int, max_len: int) -> List[Dict]:
+        # round up so prefill sequence tiles always fit the cache
+        cache_len = self.plan.padded_seq(max_len)
+        return hmp.make_kv_cache(
+            batch, cache_len, len(self.layers), self.mesh, self.plan,
+            dtype=self.embed.dtype,
+        )
+
+    def prefill(self, tokens, cache):
+        b, s = tokens.shape
+        key = (b, s)
+        if key not in self._prefill_fns:
+            s_pad = self.plan.padded_seq(s)
+            mesh, plan, overlap = self.mesh, self.plan, self.overlap
+
+            def prefill(layers, embed, tokens, cache):
+                tokens = jnp.pad(tokens, ((0, 0), (0, s_pad - s)))
+                x = embed[tokens]  # (B, S_pad, d)
+                y, cache = hmp.hmp_prefill(
+                    layers, x, mesh, cache, plan=plan, overlap=overlap
+                )
+                logits = y[:, s - 1] @ embed.T
+                return logits, cache
+
+            self._prefill_fns[key] = jax.jit(prefill)
+        return self._prefill_fns[key](self.layers, self.embed, tokens, cache)
+
+    def decode(self, tokens, cache, index):
+        if self._decode_fn is None:
+            mesh, plan = self.mesh, self.plan
+
+            def decode(layers, embed, tokens, cache, index):
+                x = embed[tokens]  # (B, 1, d)
+                y, cache = hmp.hmp_decode(layers, x, mesh, cache, index, plan=plan)
+                logits = y[:, -1] @ embed.T
+                return logits, cache
+
+            self._decode_fn = jax.jit(decode)
+        return self._decode_fn(self.layers, self.embed, tokens, cache, index)

@@ -33,9 +33,9 @@ def test_all_schedules_match_reference():
     (paper Fig. 5 consistency requirement)."""
     run_multidevice("""
         import jax, jax.numpy as jnp
-        from jax.sharding import AxisType
         from repro.core import hmp
-        mesh = jax.make_mesh((4,), ('model',), axis_types=(AxisType.Auto,))
+        from repro.launch.mesh import make_mesh_compat
+        mesh = make_mesh_compat((4,), ('model',))
         p = hmp.init_layer_params(jax.random.PRNGKey(0), 64, 8, 128)
         x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, 64)) * 0.5
         ref = hmp.reference_layer(p, x)
@@ -52,10 +52,11 @@ def test_ring_primitives_match_sync():
     (paper §III-D: 'without yielding results inconsistent')."""
     run_multidevice("""
         import functools, jax, jax.numpy as jnp
-        from jax.sharding import AxisType, PartitionSpec as P
+        from jax.sharding import PartitionSpec as P
         from jax.experimental.shard_map import shard_map
         from repro.core import ring
-        mesh = jax.make_mesh((4,), ('model',), axis_types=(AxisType.Auto,))
+        from repro.launch.mesh import make_mesh_compat
+        mesh = make_mesh_compat((4,), ('model',))
         x = jax.random.normal(jax.random.PRNGKey(0), (2, 32, 16))
         w1 = jax.random.normal(jax.random.PRNGKey(1), (16, 64))
         h = jax.random.normal(jax.random.PRNGKey(2), (2, 32, 64))
@@ -89,7 +90,6 @@ def test_gspmd_model_matches_single_device():
     single-device model: run the reduced qwen forward on a 1x4 mesh."""
     run_multidevice("""
         import jax, jax.numpy as jnp, numpy as np
-        from jax.sharding import AxisType
         from repro.configs import get_config, reduced
         from repro.models import apply_model, init_params
         from repro.models.sharding import axis_rules, make_rules
@@ -97,8 +97,8 @@ def test_gspmd_model_matches_single_device():
         params = init_params(cfg, jax.random.PRNGKey(0))
         toks = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0, cfg.vocab_size)
         ref, _, _ = apply_model(params, cfg, mode='train', tokens=toks)
-        mesh = jax.make_mesh((1, 4), ('data', 'model'),
-                             axis_types=(AxisType.Auto,) * 2)
+        from repro.launch.mesh import make_mesh_compat
+        mesh = make_mesh_compat((1, 4), ('data', 'model'))
         rules = make_rules(mesh, 'train', batch_size=2)
         with mesh:
             def fwd(p, t):
@@ -114,7 +114,6 @@ def test_gspmd_model_matches_single_device():
 def test_gspmd_moe_matches_single_device():
     run_multidevice("""
         import jax, jax.numpy as jnp
-        from jax.sharding import AxisType
         from repro.configs import get_config, reduced
         from repro.models import apply_model, init_params
         from repro.models.sharding import axis_rules, make_rules
@@ -122,8 +121,8 @@ def test_gspmd_moe_matches_single_device():
         params = init_params(cfg, jax.random.PRNGKey(0))
         toks = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0, cfg.vocab_size)
         ref, _, _ = apply_model(params, cfg, mode='train', tokens=toks)
-        mesh = jax.make_mesh((2, 2), ('data', 'model'),
-                             axis_types=(AxisType.Auto,) * 2)
+        from repro.launch.mesh import make_mesh_compat
+        mesh = make_mesh_compat((2, 2), ('data', 'model'))
         rules = make_rules(mesh, 'train', batch_size=2)
         with mesh:
             def fwd(p, t):
@@ -141,9 +140,9 @@ def test_hmp_stack_of_layers():
     cross-layer sharding drift."""
     run_multidevice("""
         import jax, jax.numpy as jnp
-        from jax.sharding import AxisType
         from repro.core import hmp
-        mesh = jax.make_mesh((4,), ('model',), axis_types=(AxisType.Auto,))
+        from repro.launch.mesh import make_mesh_compat
+        mesh = make_mesh_compat((4,), ('model',))
         keys = jax.random.split(jax.random.PRNGKey(0), 3)
         layers = [hmp.init_layer_params(k, 32, 4, 64) for k in keys]
         x = jax.random.normal(jax.random.PRNGKey(9), (2, 8, 32)) * 0.5

@@ -1,13 +1,14 @@
 """Logical-axis rule tables + shape-safe spec generation (the mechanism the
 HMP layout is expressed through)."""
 import jax
-from jax.sharding import AxisType, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
 
+from repro.launch.mesh import make_mesh_compat
 from repro.models.sharding import Rules, make_rules
 
 
 def _mesh():
-    return jax.make_mesh((1, 1), ("data", "model"), axis_types=(AxisType.Auto,) * 2)
+    return make_mesh_compat((1, 1), ("data", "model"))
 
 
 def test_rules_dedup_mesh_axes():
@@ -17,7 +18,7 @@ def test_rules_dedup_mesh_axes():
 
 
 def test_shape_safe_drops_nondividing():
-    mesh = jax.make_mesh((1, 1), ("data", "model"), axis_types=(AxisType.Auto,) * 2)
+    mesh = make_mesh_compat((1, 1), ("data", "model"))
     # fake sizes via mapping against a mesh of known shape
     import numpy as np
 
