@@ -18,7 +18,6 @@ import sys
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-import json
 
 from repro.launch import dryrun
 

@@ -21,7 +21,7 @@ individually after the scanned groups (see models/transformer.py).
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
+from typing import Tuple
 
 # Attention kinds usable inside a block pattern.
 ATTN_KINDS = ("attn", "xattn")

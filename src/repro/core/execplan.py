@@ -209,6 +209,14 @@ class ExecPlan:
             return p
         return self.pad_layer_params(p)
 
+    # --- paged KV geometry ----------------------------------------------------
+    def kv_page_bytes(self, page_size: int, dtype_bytes: int = 4) -> int:
+        """Bytes of one K+V pool page for one layer under this plan's padded
+        head layout — what ``hmp.make_paged_kv_cache`` allocates per page.
+        Padded head slots are dead weight here too: page memory scales with
+        ``padded_heads``, not ``num_heads``."""
+        return 2 * page_size * self.padded_heads * self.head_dim * dtype_bytes
+
     # --- scoring hooks --------------------------------------------------------
     def compute_fractions(self, padded: bool = False):
         """(mha_frac, mlp_frac): per-device share of each block's total work.

@@ -266,34 +266,41 @@ def hmp_prefill(layers: Sequence[Dict], x, mesh: Mesh, cache: List[Dict],
     return x, new_cache
 
 
+def _decode_mlp_tail(p, x, g):
+    """Shared tail of the single-token TP step: attention output -> residual
+    LN -> TP MLP (psum exit) -> residual LN."""
+    x = _ln(x + g, p["ln1_s"], p["ln1_b"])
+    h = jax.nn.gelu(jnp.einsum("bsd,df->bsf", x, p["w1"]))
+    f = jax.lax.psum(jnp.einsum("bsf,fd->bsd", h, p["w2"]), AXIS)
+    return _ln(x + f, p["ln2_s"], p["ln2_b"])
+
+
 def _decode_layer_local(p, x, ck, cv, index):
     """Single-token TP step on one device.  x: (B, 1, d) replicated; the SP
     axis is degenerate at one token, so connective blocks run redundantly and
     each TP block exits through an AllReduce (psum) instead of the ring.
     Writes this step's K/V into the local cache shard *before* attending, so
-    position ``index`` is always valid."""
+    position ``index`` is always valid.  index: (B,) per-slot positions —
+    slots in a wave may sit at different depths (mixed-length prompts)."""
     d_model = x.shape[-1]
+    b = x.shape[0]
     h_loc, hd = p["wq"].shape[1], p["wq"].shape[2]
     cache_len = ck.shape[1]
 
     q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
     k_new = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
     v_new = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
-    ck = jax.lax.dynamic_update_slice(ck, k_new, (0, index, 0, 0))
-    cv = jax.lax.dynamic_update_slice(cv, v_new, (0, index, 0, 0))
+    rows = jnp.arange(b)
+    ck = ck.at[rows, index].set(k_new[:, 0])
+    cv = cv.at[rows, index].set(v_new[:, 0])
 
     scores = jnp.einsum("bqhd,bthd->bhqt", q, ck).astype(jnp.float32) / np.sqrt(hd)
-    valid = jnp.arange(cache_len) <= index
-    scores = jnp.where(valid[None, None, None, :], scores, -1e30)
+    valid = jnp.arange(cache_len)[None, :] <= index[:, None]  # (B, T)
+    scores = jnp.where(valid[:, None, None, :], scores, -1e30)
     probs = jax.nn.softmax(scores, axis=-1).astype(cv.dtype)
     attn = jnp.einsum("bhqt,bthd->bqhd", probs, cv).reshape(*x.shape[:2], h_loc * hd)
     g = jax.lax.psum(attn @ p["wo"].reshape(-1, d_model), AXIS)
-    x = _ln(x + g, p["ln1_s"], p["ln1_b"])
-
-    h = jax.nn.gelu(jnp.einsum("bsd,df->bsf", x, p["w1"]))
-    f = jax.lax.psum(jnp.einsum("bsf,fd->bsd", h, p["w2"]), AXIS)
-    x = _ln(x + f, p["ln2_s"], p["ln2_b"])
-    return x, ck, cv
+    return _decode_mlp_tail(p, x, g), ck, cv
 
 
 def hmp_decode(layers: Sequence[Dict], x, mesh: Mesh, cache: List[Dict],
@@ -301,7 +308,8 @@ def hmp_decode(layers: Sequence[Dict], x, mesh: Mesh, cache: List[Dict],
     """One decode step for a stack of HMP layers against the KV cache.
 
     x: (B, 1, d) current-token embedding (replicated); index: scalar int32
-    absolute position of this token.  Returns (y, cache) with y replicated.
+    or (B,) vector of absolute positions (per-slot depths for mixed-length
+    waves).  Returns (y, cache) with y replicated.
     """
     layers = [_validate_plan(p, None, mesh, plan) for p in layers]
     fn = shard_map(
@@ -311,6 +319,8 @@ def hmp_decode(layers: Sequence[Dict], x, mesh: Mesh, cache: List[Dict],
         out_specs=(P(), CACHE_SPEC, CACHE_SPEC),
     )
     index = jnp.asarray(index, jnp.int32)
+    if index.ndim == 0:
+        index = jnp.broadcast_to(index, (x.shape[0],))
     new_cache = []
     for p, c in zip(layers, cache):
         x, ck, cv = fn(p, x, c["k"], c["v"], index)
@@ -318,12 +328,148 @@ def hmp_decode(layers: Sequence[Dict], x, mesh: Mesh, cache: List[Dict],
     return x, new_cache
 
 
+# --- paged serving path: pool pages + block tables ----------------------------
+
+# pool pages are (num_pages, page_size, heads, head_dim), head-sharded like
+# the dense cache (same axis position), so page shards line up with the
+# weight shards under any ExecPlan
+PAGED_CACHE_SPEC = CACHE_SPEC
+
+
+def make_paged_kv_cache(num_pages: int, page_size: int, num_layers: int,
+                        mesh: Mesh, plan: ExecPlan,
+                        dtype=jnp.float32) -> List[Dict]:
+    """Head-sharded paged KV pool storage for a stack of HMP layers.
+
+    Each layer holds k/v pages of global shape (num_pages, page_size,
+    padded_heads, hd); the head axis carries the plan's padded layout exactly
+    like ``make_kv_cache``, so a slot's gathered pages are shard-compatible
+    with the dense cache.  Page 0 is the null page (``serving/kvpool.py``):
+    idle-slot writes land there and masked reads never see it.
+    """
+    shape = (num_pages, page_size, plan.padded_heads, plan.head_dim)
+    sharding = NamedSharding(mesh, PAGED_CACHE_SPEC)
+    return [
+        {"k": jax.device_put(jnp.zeros(shape, dtype), sharding),
+         "v": jax.device_put(jnp.zeros(shape, dtype), sharding)}
+        for _ in range(num_layers)
+    ]
+
+
+def _prefill_paged_layer_local(p, x_loc, pk, pv, phys, within, *, overlap):
+    """Prefill one layer and scatter its K/V head shards straight into pool
+    pages.  phys/within: (S,) physical page and in-page slot per position."""
+    y_loc, k, v = _hmp_layer_local(p, x_loc, overlap=overlap, return_kv=True)
+    pk = pk.at[phys, within].set(k[0])
+    pv = pv.at[phys, within].set(v[0])
+    return y_loc, pk, pv
+
+
+def hmp_prefill_paged(layers: Sequence[Dict], x, mesh: Mesh,
+                      pages: List[Dict], block_row, *, plan: ExecPlan,
+                      overlap: bool = False):
+    """Run a stack of HMP layers over one prompt, writing KV into pool pages.
+
+    x: (1, S, d) with S a multiple of the mesh size (padded prompt; padded
+    positions write garbage KV that decode overwrites before reading, same
+    as the dense path).  block_row: (pages_per_slot,) physical page ids for
+    this request's logical pages.  Returns (y, pages).
+    """
+    if x.shape[0] != 1:
+        raise ValueError("paged prefill is per-request: batch must be 1")
+    layers = [_validate_plan(p, x, mesh, plan) for p in layers]
+    s = x.shape[1]
+    page_size = pages[0]["k"].shape[1]
+    if s > block_row.shape[0] * page_size:
+        raise ValueError(
+            f"prompt of {s} positions exceeds the block row "
+            f"({block_row.shape[0]} pages x {page_size})"
+        )
+    pos = jnp.arange(s)
+    phys = block_row[pos // page_size].astype(jnp.int32)
+    within = (pos % page_size).astype(jnp.int32)
+    fn = shard_map(
+        functools.partial(_prefill_paged_layer_local, overlap=overlap),
+        mesh=mesh,
+        in_specs=(layer_param_specs(), P(None, AXIS, None),
+                  PAGED_CACHE_SPEC, PAGED_CACHE_SPEC, P(), P()),
+        out_specs=(P(None, AXIS, None), PAGED_CACHE_SPEC, PAGED_CACHE_SPEC),
+    )
+    new_pages = []
+    for p, c in zip(layers, pages):
+        x, pk, pv = fn(p, x, c["k"], c["v"], phys, within)
+        new_pages.append({"k": pk, "v": pv})
+    return x, new_pages
+
+
+def _decode_paged_layer_local(p, x, pk, pv, block_table, positions):
+    """Paged single-token TP step on one device.  x: (S, 1, d) replicated
+    slot batch; block_table: (S, W) physical page per (slot, logical page);
+    positions: (S,) absolute position each slot writes this step.
+
+    Scatters the new K/V entry into its page, then gathers each slot's pages
+    into a (S, W*page_size, h_loc, hd) view via the block table and attends
+    under the per-slot length mask.  Idle slots carry all-null block rows:
+    their write lands in the null page and every null read is masked."""
+    d_model = x.shape[-1]
+    h_loc, hd = p["wq"].shape[1], p["wq"].shape[2]
+    page_size = pk.shape[1]
+    w = block_table.shape[1]
+
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k_new = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v_new = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+
+    rows = jnp.arange(x.shape[0])
+    phys = block_table[rows, positions // page_size]
+    within = positions % page_size
+    pk = pk.at[phys, within].set(k_new[:, 0])
+    pv = pv.at[phys, within].set(v_new[:, 0])
+
+    # gather this slot's logical context: (S, W, page, h, hd) -> (S, T, h, hd)
+    ks = pk[block_table].reshape(x.shape[0], w * page_size, h_loc, hd)
+    vs = pv[block_table].reshape(x.shape[0], w * page_size, h_loc, hd)
+
+    scores = jnp.einsum("bqhd,bthd->bhqt", q, ks).astype(jnp.float32) / np.sqrt(hd)
+    valid = jnp.arange(w * page_size)[None, :] <= positions[:, None]  # (S, T)
+    scores = jnp.where(valid[:, None, None, :], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(vs.dtype)
+    attn = jnp.einsum("bhqt,bthd->bqhd", probs, vs).reshape(*x.shape[:2], h_loc * hd)
+    g = jax.lax.psum(attn @ p["wo"].reshape(-1, d_model), AXIS)
+    return _decode_mlp_tail(p, x, g), pk, pv
+
+
+def hmp_decode_paged(layers: Sequence[Dict], x, mesh: Mesh,
+                     pages: List[Dict], block_table, positions, *,
+                     plan: ExecPlan):
+    """One continuous-batching decode step against the paged KV pool.
+
+    x: (S, 1, d) slot-batch embeddings (replicated); block_table: (S, W)
+    int32; positions: (S,) int32 per-slot absolute positions.  Returns
+    (y, pages) with y replicated.
+    """
+    layers = [_validate_plan(p, None, mesh, plan) for p in layers]
+    fn = shard_map(
+        _decode_paged_layer_local,
+        mesh=mesh,
+        in_specs=(layer_param_specs(), P(), PAGED_CACHE_SPEC, PAGED_CACHE_SPEC,
+                  P(), P()),
+        out_specs=(P(), PAGED_CACHE_SPEC, PAGED_CACHE_SPEC),
+    )
+    block_table = jnp.asarray(block_table, jnp.int32)
+    positions = jnp.asarray(positions, jnp.int32)
+    new_pages = []
+    for p, c in zip(layers, pages):
+        x, pk, pv = fn(p, x, c["k"], c["v"], block_table, positions)
+        new_pages.append({"k": pk, "v": pv})
+    return x, new_pages
+
+
 # --- Megatron-LM TP baseline -----------------------------------------------
 
 def _megatron_layer_local(p, x):
     """x replicated; AllReduce after each block; connective computed
     redundantly on every device (the waste HMP eliminates)."""
-    d_model = x.shape[-1]
     h_loc, hd = p["wq"].shape[1], p["wq"].shape[2]
     q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
     k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])

@@ -9,7 +9,6 @@ MXU's 128x128 systolic array.
 """
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

@@ -25,6 +25,12 @@ def main():
     ap.add_argument("--max-new", type=int, default=32)
     ap.add_argument("--max-batch", type=int, default=8)
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--scheduler", choices=("auto", "continuous", "wave"),
+                    default="auto",
+                    help="auto = continuous batching when the executor "
+                         "implements the paged protocol, else waves")
+    ap.add_argument("--page-size", type=int, default=16,
+                    help="KV pool page size (continuous batching)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -39,6 +45,8 @@ def main():
         max_batch=args.max_batch,
         max_len=args.prompt_len + args.max_new,
         sampler=SamplerConfig(temperature=args.temperature),
+        scheduler=args.scheduler,
+        page_size=args.page_size,
     )
 
     rng = np.random.default_rng(0)

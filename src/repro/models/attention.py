@@ -185,17 +185,27 @@ def self_attention_block(
     elif mode == "decode":
         k_cache, v_cache = cache["k"], cache["v"]
         cache_len = k_cache.shape[1]
+        per_slot = jnp.ndim(cache_index) == 1  # (B,) per-slot write depths
         if window > 0:
             slot = jnp.mod(cache_index, window)
         else:
             slot = cache_index
-        k_cache = jax.lax.dynamic_update_slice(k_cache, k, (0, slot, 0, 0))
-        v_cache = jax.lax.dynamic_update_slice(v_cache, v, (0, slot, 0, 0))
+        if per_slot:
+            rows = jnp.arange(k.shape[0])
+            k_cache = k_cache.at[rows, slot].set(k[:, 0])
+            v_cache = v_cache.at[rows, slot].set(v[:, 0])
+        else:
+            k_cache = jax.lax.dynamic_update_slice(k_cache, k, (0, slot, 0, 0))
+            v_cache = jax.lax.dynamic_update_slice(v_cache, v, (0, slot, 0, 0))
         k_cache = constrain(k_cache, CACHE_AXES)
         v_cache = constrain(v_cache, CACHE_AXES)
         new_cache = {"k": k_cache, "v": v_cache}
         if window > 0:
-            k_pos = _window_cache_positions(cache_index, window)
+            k_pos = _window_cache_positions(
+                cache_index[:, None] if per_slot else cache_index, window)
+        elif per_slot:
+            span = jnp.arange(cache_len)[None, :]
+            k_pos = jnp.where(span <= cache_index[:, None], span, -1)
         else:
             k_pos = jnp.where(jnp.arange(cache_len) <= cache_index,
                               jnp.arange(cache_len), -1)

@@ -22,7 +22,7 @@ from repro.models.layers import apply_norm, sinusoidal_pos
 from repro.models.mlp import mlp_block
 from repro.models.moe import moe_block
 from repro.models.rglru import rglru_block
-from repro.models.sharding import constrain, current_rules
+from repro.models.sharding import constrain
 from repro.models.xlstm import mlstm_block, slstm_block
 
 AUX_KEYS = ("moe_lb_loss", "moe_z_loss", "moe_drop_frac")
@@ -153,13 +153,18 @@ def apply_model(
         x = embeds.astype(dtype)
         bsz, seq = embeds.shape[0], embeds.shape[1]
 
-    if positions is None:
-        if mode == "decode":
-            positions = jnp.full((bsz, seq), cache_index, jnp.int32)
-        else:
-            positions = jnp.broadcast_to(jnp.arange(seq, dtype=jnp.int32), (bsz, seq))
     if mode == "decode" and cache_index is None:
         raise ValueError("decode mode requires cache_index")
+    if positions is None:
+        if mode == "decode":
+            # scalar index (lockstep batch) or (B,) per-slot depths
+            ci = jnp.asarray(cache_index, jnp.int32)
+            if ci.ndim == 1:
+                positions = jnp.broadcast_to(ci[:, None], (bsz, seq))
+            else:
+                positions = jnp.full((bsz, seq), ci, jnp.int32)
+        else:
+            positions = jnp.broadcast_to(jnp.arange(seq, dtype=jnp.int32), (bsz, seq))
 
     if cfg.pos_embedding == "sinusoidal":
         x = x + sinusoidal_pos(positions, cfg.d_model, dtype)

@@ -1,22 +1,36 @@
-"""Serving engine: batched prefill + lockstep decode with wave scheduling.
+"""Serving engine: continuous batching over a paged KV pool, with the wave
+scheduler kept as the reference path.
 
-Requests are bucketed by prompt length; a *wave* is a batch of same-length
-prompts that prefill together and decode in lockstep (shared cache index).
-New requests join at wave boundaries; finished slots free at every step
-(per-slot EOS/length tracking), and a wave retires when all slots finish —
-a static-batching continuous scheduler, the standard pattern before paged
-attention.  All shape-dependent functions are jitted once per (batch,
-prompt_len) bucket and reused.
+Two schedulers share one engine:
+
+* ``continuous`` (default when the executor implements the paged protocol)
+  — a fixed decode batch of ``max_batch`` *slots* over a shared
+  :class:`~repro.serving.kvpool.PagedKVPool`.  Requests are admitted from
+  the queue the moment a slot frees (respecting pool capacity), prefill
+  writes prompt KV straight into pool pages, every decode step advances all
+  live slots at their own depths, and finished requests retire per-slot
+  (EOS / max-len), returning their pages for reuse.  No slot idles while
+  work is queued — the fix for wave-at-a-time decode, where a finished
+  request left its batch slot dead until the whole wave drained.
+* ``wave`` — batch same-length prompts, prefill together, decode in
+  lockstep.  Kept both as the fallback for executors without the paged
+  protocol and as the correctness oracle: for greedy sampling the two
+  schedulers produce identical tokens, which tests pin on both executors.
 
 The engine is model-agnostic: it drives an *executor* exposing
-``make_cache`` / ``prefill`` / ``decode``.  ``TransformerExecutor`` (default)
-runs the production GSPMD model zoo; ``serving.galaxy.GalaxyHMPExecutor``
-runs the paper-exact HMP schedule under an uneven ``ExecPlan`` on a
-multi-device mesh — same wave scheduler, different parallel program.
+``make_cache`` / ``prefill`` / ``decode`` (wave) and, optionally, the paged
+protocol ``supports_paged`` / ``make_pool`` / ``prefill_paged`` /
+``decode_paged`` plus the ``prompt_pad_multiple`` padding policy (1 for the
+single-device ``TransformerExecutor``; the mesh size for
+``serving.galaxy.GalaxyHMPExecutor``, whose SP prefill needs sequence
+multiples).  All shape-dependent functions are jitted once per shape bucket
+and reused.
 """
 from __future__ import annotations
 
 import dataclasses
+import math
+import time
 from collections import defaultdict, deque
 from typing import Dict, List, Optional
 
@@ -27,7 +41,8 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.models.sharding import Rules, axis_rules
 from repro.models.transformer import apply_model
-from repro.serving.kvcache import make_cache
+from repro.serving.kvcache import cache_page_size, make_cache, map_cache_leaves
+from repro.serving.kvpool import PagedKVPool
 from repro.serving.sampler import SamplerConfig, sample
 
 
@@ -39,6 +54,13 @@ class Request:
     eos_id: Optional[int] = None
     output: List[int] = dataclasses.field(default_factory=list)
     done: bool = False
+    # perf_counter stamp per emitted token (filled when the engine runs with
+    # record_times=True; the microbench derives per-token latency from it)
+    token_times: List[float] = dataclasses.field(default_factory=list)
+
+
+def _roundup(x: int, m: int) -> int:
+    return -(-x // m) * m
 
 
 class TransformerExecutor:
@@ -50,25 +72,40 @@ class TransformerExecutor:
         self.rules = rules
         self._prefill_fns: Dict = {}
         self._decode_fn = None
+        self._decode_paged_fn = None
 
+    # --- padding policy ------------------------------------------------------
+    @property
+    def prompt_pad_multiple(self) -> int:
+        """Prompts need no length padding on a single GSPMD program."""
+        return 1
+
+    # --- wave protocol -------------------------------------------------------
     def make_cache(self, batch: int, max_len: int):
         return make_cache(self.cfg, batch, max_len, rules=self.rules)
 
-    def prefill(self, tokens, cache):
+    def prefill(self, tokens, cache, lengths=None):
+        """Prefill a batch of prompts.  ``lengths`` (B,) gathers each row's
+        last *real* logit when prompts were right-padded to a shared length;
+        None keeps the single-length fast path (logits of the last column)."""
         b, s = tokens.shape
-        key = (b, s)
+        key = (b, s, lengths is not None)
         if key not in self._prefill_fns:
             cfg, rules = self.cfg, self.rules
 
-            def prefill(params, tokens, cache):
+            def prefill(params, tokens, cache, lengths=None):
                 with axis_rules(rules):
                     logits, cache, _ = apply_model(
                         params, cfg, tokens=tokens, mode="prefill", cache=cache
                     )
-                return logits[:, -1], cache
+                if lengths is None:
+                    return logits[:, -1], cache
+                return logits[jnp.arange(b), lengths - 1], cache
 
             self._prefill_fns[key] = jax.jit(prefill)
-        return self._prefill_fns[key](self.params, tokens, cache)
+        if lengths is None:
+            return self._prefill_fns[key](self.params, tokens, cache)
+        return self._prefill_fns[key](self.params, tokens, cache, lengths)
 
     def decode(self, tokens, cache, index):
         if self._decode_fn is None:
@@ -85,6 +122,111 @@ class TransformerExecutor:
             self._decode_fn = jax.jit(decode)
         return self._decode_fn(self.params, tokens, cache, index)
 
+    # --- paged protocol ------------------------------------------------------
+    @property
+    def supports_paged(self) -> bool:
+        """Paged serving covers full-causal attention stacks; recurrent and
+        sliding-window caches are not position-addressable pages."""
+        cfg = self.cfg
+        kinds = tuple(cfg.block_pattern) + tuple(cfg.tail_pattern)
+        return all(k == "attn" for k in kinds) and cfg.window == 0
+
+    def make_pool(self, num_pages: int, page_size: int):
+        """Pool storage: the model-zoo cache pytree with (batch, seq) read as
+        (page, in-page slot) — every leaf is (groups?, P, page_size, kv, hd)."""
+        return make_cache(self.cfg, num_pages, page_size, rules=self.rules)
+
+    def prefill_paged(self, tokens, pool, block_row, length: int):
+        """Prefill one request (batch 1) and scatter its KV into pool pages.
+
+        tokens: (1, S_pad); length: real prompt length (logits are taken at
+        ``length - 1``); block_row: (W,) physical pages of this request.
+        """
+        b, s = tokens.shape
+        if b != 1:
+            raise ValueError("paged prefill is per-request: batch must be 1")
+        key = ("paged", s)
+        if key not in self._prefill_fns:
+            cfg, rules = self.cfg, self.rules
+
+            # length stays a traced scalar so every prompt sharing this
+            # padded shape reuses one compiled program
+            def prefill(params, tokens, pool, block_row, length):
+                page_size = cache_page_size(pool)
+                with axis_rules(rules):
+                    dense = make_cache(cfg, 1, s)
+                    logits, dense, _ = apply_model(
+                        params, cfg, tokens=tokens, mode="prefill", cache=dense
+                    )
+                pos = jnp.arange(s)
+                phys = block_row[pos // page_size]
+                within = pos % page_size
+
+                def scatter(leaf, new, grouped):
+                    if grouped:
+                        return leaf.at[:, phys, within].set(new[:, 0])
+                    return leaf.at[phys, within].set(new[0])
+
+                pool = map_cache_leaves(pool, dense, scatter)
+                return logits[:, length - 1], pool
+
+            # donate the pool so XLA scatters into the pages in place
+            # instead of copying the whole pool every call
+            self._prefill_fns[key] = jax.jit(prefill, donate_argnums=(2,))
+        return self._prefill_fns[key](
+            self.params, tokens, pool, block_row, jnp.asarray(length, jnp.int32)
+        )
+
+    def decode_paged(self, tokens, pool, block_table, positions):
+        """One continuous-batching step: gather each slot's pages into a
+        dense per-slot view, run the single-token model at per-slot depths,
+        scatter the new KV entry back into its page."""
+        if self._decode_paged_fn is None:
+            cfg, rules = self.cfg, self.rules
+
+            def decode(params, tokens, pool, bt, positions):
+                page_size = cache_page_size(pool)
+                slots, w = bt.shape
+                rows = jnp.arange(slots)
+
+                def gather(leaf, _, grouped):
+                    if grouped:
+                        g = leaf[:, bt]  # (G, S, W, page, kv, hd)
+                        return g.reshape(*g.shape[:2], w * page_size, *g.shape[4:])
+                    g = leaf[bt]
+                    return g.reshape(slots, w * page_size, *g.shape[3:])
+
+                dense = map_cache_leaves(pool, pool, gather)
+                with axis_rules(rules):
+                    logits, dense, _ = apply_model(
+                        params, cfg, tokens=tokens, mode="decode",
+                        cache=dense, cache_index=positions,
+                    )
+                phys = bt[rows, positions // page_size]
+                within = positions % page_size
+
+                def scatter(leaf, new, grouped):
+                    if grouped:
+                        return leaf.at[:, phys, within].set(new[:, rows, positions])
+                    return leaf.at[phys, within].set(new[rows, positions])
+
+                pool = map_cache_leaves(pool, dense, scatter)
+                return logits[:, -1], pool
+
+            self._decode_paged_fn = jax.jit(decode, donate_argnums=(2,))
+        return self._decode_paged_fn(
+            self.params, tokens, pool, block_table, positions
+        )
+
+
+@dataclasses.dataclass
+class _Slot:
+    """Per-slot decode state for the continuous scheduler."""
+    req: Request
+    last_token: int
+    next_index: int   # absolute position the next decode step writes
+    limit: int        # min(max_new_tokens, max_len - prompt_len)
+
 
 class ServingEngine:
     def __init__(
@@ -98,6 +240,10 @@ class ServingEngine:
         sampler: SamplerConfig = SamplerConfig(),
         rules: Optional[Rules] = None,
         rng_seed: int = 0,
+        scheduler: str = "auto",
+        page_size: int = 16,
+        num_pages: Optional[int] = None,
+        record_times: bool = False,
     ):
         if executor is None:
             if params is None or cfg is None:
@@ -107,28 +253,164 @@ class ServingEngine:
             raise ValueError(
                 "params/cfg/rules belong to the executor; pass one or the other"
             )
+        if scheduler not in ("auto", "continuous", "wave"):
+            raise ValueError(f"unknown scheduler {scheduler!r}")
         self.executor = executor
         self.max_batch = max_batch
         self.max_len = max_len
         self.sampler = sampler
         self.rng = jax.random.PRNGKey(rng_seed)
+        self.scheduler = scheduler
+        self.page_size = page_size
+        self.num_pages = num_pages
+        self.record_times = record_times
         self.queue: deque = deque()
-        self.stats = {"prefill_tokens": 0, "decode_steps": 0, "requests": 0}
+        self.stats = {"prefill_tokens": 0, "decode_steps": 0, "requests": 0,
+                      "decode_tokens": 0}
 
     # --- request intake ---------------------------------------------------
     def submit(self, req: Request):
         self.queue.append(req)
         self.stats["requests"] += 1
 
+    def run(self) -> List[Request]:
+        """Drain the queue; returns all completed requests."""
+        mode = self.scheduler
+        if mode == "auto":
+            mode = ("continuous"
+                    if getattr(self.executor, "supports_paged", False) else "wave")
+        if mode == "continuous":
+            return self._run_continuous()
+        return self._run_waves()
+
+    # --- shared helpers ---------------------------------------------------
+    @property
+    def _pad_multiple(self) -> int:
+        return getattr(self.executor, "prompt_pad_multiple", 1)
+
+    def _sample(self, logits):
+        self.rng, key = jax.random.split(self.rng)
+        return sample(logits, key, self.sampler)
+
+    def _emit(self, r: Request, token: int, limit: int) -> bool:
+        """Append one token; returns True if the request just finished."""
+        r.output.append(token)
+        if self.record_times:
+            r.token_times.append(time.perf_counter())
+        if (r.eos_id is not None and token == r.eos_id) or len(r.output) >= limit:
+            r.done = True
+            return True
+        return False
+
+    # --- continuous batching over the paged pool --------------------------
+    def _run_continuous(self) -> List[Request]:
+        ex = self.executor
+        if not getattr(ex, "supports_paged", False):
+            raise ValueError(
+                "continuous scheduler needs the paged executor protocol"
+            )
+        ps = self.page_size
+        n_slots = self.max_batch
+        # prompts pad to lcm(executor multiple, page size): page-boundary
+        # padding costs no extra pages (allocation is page-granular anyway)
+        # and bounds the number of distinct prefill shapes — one compiled
+        # program per page count instead of one per prompt length
+        grain = math.lcm(self._pad_multiple, ps)
+        pad_max = _roundup(self.max_len, grain)
+        pages_per_slot = pad_max // ps
+        total_pages = self.num_pages or (1 + n_slots * pages_per_slot)
+        pool = PagedKVPool(total_pages, ps, n_slots, pages_per_slot)
+        storage = ex.make_pool(total_pages, ps)
+        slots: List[Optional[_Slot]] = [None] * n_slots
+        finished: List[Request] = []
+
+        def admit() -> None:
+            nonlocal storage
+            while self.queue:
+                slot = pool.free_slot()
+                if slot is None:
+                    return
+                r = self.queue[0]
+                s = len(r.prompt)
+                limit = min(r.max_new_tokens, self.max_len - s)
+                if limit <= 0:  # no room to decode even one token
+                    self.queue.popleft()
+                    r.done = True
+                    finished.append(r)
+                    continue
+                s_pad = _roundup(s, grain)
+                max_positions = max(s_pad, s + limit)
+                if not pool.can_admit(max_positions):
+                    return
+                self.queue.popleft()
+                pool.admit(slot, initial_positions=s_pad,
+                           max_positions=max_positions)
+                tokens = np.zeros((1, s_pad), np.int32)
+                tokens[0, :s] = r.prompt
+                block_row = jnp.asarray(pool.block_table[slot])
+                logits, storage = ex.prefill_paged(
+                    jnp.asarray(tokens), storage, block_row, length=s
+                )
+                self.stats["prefill_tokens"] += s
+                tok = int(np.asarray(self._sample(logits))[0])
+                if self._emit(r, tok, limit):
+                    pool.retire(slot)
+                    finished.append(r)
+                else:
+                    slots[slot] = _Slot(r, tok, s, limit)
+
+        admit()
+        while any(slots) or self.queue:
+            if not any(slots):
+                # nothing active and nothing admissible: the head request can
+                # never fit (pool smaller than one request)
+                r = self.queue[0]
+                raise RuntimeError(
+                    f"request uid={r.uid} (prompt {len(r.prompt)}, "
+                    f"max_new {r.max_new_tokens}) cannot fit the pool of "
+                    f"{total_pages} pages x {ps}"
+                )
+            live = [i for i, sl in enumerate(slots) if sl is not None]
+            tokens = np.zeros((n_slots, 1), np.int32)
+            positions = np.zeros(n_slots, np.int32)
+            for i in live:
+                pool.ensure(i, slots[i].next_index)
+                tokens[i, 0] = slots[i].last_token
+                positions[i] = slots[i].next_index
+            logits, storage = ex.decode_paged(
+                jnp.asarray(tokens), storage,
+                jnp.asarray(pool.block_table), jnp.asarray(positions),
+            )
+            self.stats["decode_steps"] += 1
+            self.stats["decode_tokens"] += len(live)
+            toks = np.asarray(self._sample(logits))
+            for i in live:
+                sl = slots[i]
+                if self._emit(sl.req, int(toks[i]), sl.limit):
+                    pool.retire(i)
+                    slots[i] = None
+                    finished.append(sl.req)
+                else:
+                    sl.last_token = int(toks[i])
+                    sl.next_index += 1
+            admit()  # freed slots refill immediately — continuous batching
+        return finished
+
     # --- wave execution ------------------------------------------------------
+    def _bucket_len(self, prompt_len: int) -> int:
+        """Wave bucket key: prompt length rounded up to the executor's
+        padding multiple, so e.g. 11- and 12-token prompts share a wave on a
+        4-device mesh while a single-device executor buckets exact lengths."""
+        return _roundup(prompt_len, self._pad_multiple)
+
     def _next_wave(self) -> List[Request]:
-        """Take up to max_batch queued requests of the same prompt length."""
+        """Take up to max_batch queued requests from the largest bucket."""
         if not self.queue:
             return []
         buckets: Dict[int, List[Request]] = defaultdict(list)
         for r in self.queue:
-            buckets[len(r.prompt)].append(r)
-        length, reqs = max(buckets.items(), key=lambda kv: len(kv[1]))
+            buckets[self._bucket_len(len(r.prompt))].append(r)
+        _, reqs = max(buckets.items(), key=lambda kv: len(kv[1]))
         wave = reqs[: self.max_batch]
         # one-pass rebuild (deque.remove in a loop is O(n^2) and reorders
         # FIFO ties badly under load)
@@ -136,8 +418,7 @@ class ServingEngine:
         self.queue = deque(r for r in self.queue if id(r) not in taken)
         return wave
 
-    def run(self) -> List[Request]:
-        """Drain the queue; returns all completed requests."""
+    def _run_waves(self) -> List[Request]:
         finished: List[Request] = []
         while self.queue:
             wave = self._next_wave()
@@ -147,34 +428,58 @@ class ServingEngine:
         return finished
 
     def _run_wave(self, wave: List[Request]) -> List[Request]:
-        b = len(wave)
-        s = len(wave[0].prompt)
-        assert all(len(r.prompt) == s for r in wave), "wave must share prompt length"
-        budget = min(self.max_len - s, max(r.max_new_tokens for r in wave))
+        # zero-budget requests (max_new_tokens=0, prompt filling or exceeding
+        # max_len) never emit and never prefill, matching the continuous
+        # path's admission-time retirement — an oversized prompt must not
+        # reach the executor, whose cache only holds max_len positions
+        for r in wave:
+            if min(r.max_new_tokens, self.max_len - len(r.prompt)) <= 0:
+                r.done = True
+        live = [r for r in wave if not r.done]
+        if not live:
+            return wave
+        b = len(live)
+        lengths = np.array([len(r.prompt) for r in live], np.int32)
+        limits = np.minimum([r.max_new_tokens for r in live],
+                            self.max_len - lengths)
+        budget = int(limits.max())
+        uniform = int(lengths.min()) == int(lengths.max())
+        s_pad = int(lengths[0]) if uniform else self._bucket_len(int(lengths.max()))
 
-        tokens = jnp.asarray(np.array([r.prompt for r in wave], np.int32))
+        tokens = np.zeros((b, s_pad), np.int32)
+        for i, r in enumerate(live):
+            tokens[i, : lengths[i]] = r.prompt
         cache = self.executor.make_cache(b, self.max_len)
-        logits, cache = self.executor.prefill(tokens, cache)
-        self.stats["prefill_tokens"] += b * s
+        if uniform:
+            logits, cache = self.executor.prefill(jnp.asarray(tokens), cache)
+        else:
+            logits, cache = self.executor.prefill(
+                jnp.asarray(tokens), cache, lengths=jnp.asarray(lengths)
+            )
+        self.stats["prefill_tokens"] += int(lengths.sum())
 
         active = np.ones(b, bool)
         for step in range(budget):
-            self.rng, key = jax.random.split(self.rng)
-            next_tok = sample(logits, key, self.sampler)
+            next_tok = self._sample(logits)
             next_np = np.asarray(next_tok)
-            for i, r in enumerate(wave):
+            for i, r in enumerate(live):
                 if not active[i]:
                     continue
-                t = int(next_np[i])
-                r.output.append(t)
-                if (r.eos_id is not None and t == r.eos_id) or len(r.output) >= r.max_new_tokens:
-                    r.done = True
+                if self._emit(r, int(next_np[i]), int(limits[i])):
                     active[i] = False
             if not active.any():
                 break
-            index = jnp.int32(s + step)
+            if uniform:
+                index = jnp.int32(int(lengths[0]) + step)
+            else:
+                # clamp retired slots that out-ran their own length budget;
+                # their writes land in a dead cache row and are never read
+                index = jnp.asarray(
+                    np.minimum(lengths + step, self.max_len - 1), jnp.int32
+                )
             logits, cache = self.executor.decode(next_tok[:, None], cache, index)
             self.stats["decode_steps"] += 1
-        for r in wave:
+            self.stats["decode_tokens"] += int(active.sum())
+        for r in live:
             r.done = True
         return wave

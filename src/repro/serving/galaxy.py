@@ -1,19 +1,28 @@
 """Galaxy HMP executor: serve through the paper-exact schedule.
 
-Bridges the wave scheduler (``serving/engine.py``) and the heterogeneity-
+Bridges the serving engine (``serving/engine.py``) and the heterogeneity-
 aware HMP executor (``core/hmp.py``): prefill runs the full TP/SP + ring
 program sequence-sharded over the mesh, decode runs the single-token TP
 step against the head-sharded KV cache — both under the same uneven
 ``ExecPlan`` the planner produced.
 
+Both scheduler protocols are implemented.  Wave: ``make_cache`` /
+``prefill`` / ``decode`` against a dense per-wave cache.  Paged
+(continuous batching): ``make_pool`` / ``prefill_paged`` / ``decode_paged``
+against a pool of head-sharded KV pages (``hmp.make_paged_kv_cache``) —
+prefill scatters prompt KV straight into this request's pages, decode
+gathers each slot's pages through the block table *inside* the shard_map,
+so every device only ever touches its own head shard of the pool.
+
 Prompts whose length does not divide the mesh are right-padded to the next
-multiple (token 0); causal masking keeps all real positions exact, and each
-decode step overwrites its own cache slot before attending, so the padded
+multiple (``prompt_pad_multiple``, the engine's padding policy hook);
+causal masking keeps all real positions exact, and each decode step
+overwrites its own cache slot/page entry before attending, so the padded
 prefill rows are never read.
 """
 from __future__ import annotations
 
-from typing import Dict, List, Optional, Sequence
+from typing import Dict, List, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -24,7 +33,7 @@ from repro.core.execplan import ExecPlan
 
 
 class GalaxyHMPExecutor:
-    """Executor protocol (make_cache / prefill / decode) over HMP layers.
+    """Executor protocol over HMP layers (wave + paged serving).
 
     layers: stack of layer params in *reference* layout (init_layer_params);
             padded once here via ``plan.pad_layer_params``.
@@ -40,8 +49,15 @@ class GalaxyHMPExecutor:
         self.embed = jnp.asarray(embed)
         self._prefill_fns: Dict = {}
         self._decode_fn = None
+        self._decode_paged_fn = None
 
-    # --- executor protocol ----------------------------------------------------
+    # --- padding policy -------------------------------------------------------
+    @property
+    def prompt_pad_multiple(self) -> int:
+        """SP prefill shards the sequence: prompts pad to the mesh size."""
+        return self.plan.num_devices
+
+    # --- wave protocol --------------------------------------------------------
     def make_cache(self, batch: int, max_len: int) -> List[Dict]:
         # round up so prefill sequence tiles always fit the cache
         cache_len = self.plan.padded_seq(max_len)
@@ -50,24 +66,33 @@ class GalaxyHMPExecutor:
             dtype=self.embed.dtype,
         )
 
-    def prefill(self, tokens, cache):
+    def prefill(self, tokens, cache, lengths=None):
+        """Prefill a wave.  ``lengths`` (B,) gathers each row's last real
+        logit when the wave mixes prompt lengths (rows right-padded)."""
         b, s = tokens.shape
-        key = (b, s)
+        key = (b, s, lengths is not None)
         if key not in self._prefill_fns:
             s_pad = self.plan.padded_seq(s)
             mesh, plan, overlap = self.mesh, self.plan, self.overlap
 
-            def prefill(layers, embed, tokens, cache):
+            def prefill(layers, embed, tokens, cache, lengths=None):
                 tokens = jnp.pad(tokens, ((0, 0), (0, s_pad - s)))
                 x = embed[tokens]  # (B, S_pad, d)
                 y, cache = hmp.hmp_prefill(
                     layers, x, mesh, cache, plan=plan, overlap=overlap
                 )
-                logits = y[:, s - 1] @ embed.T
+                if lengths is None:
+                    logits = y[:, s - 1] @ embed.T
+                else:
+                    logits = y[jnp.arange(b), lengths - 1] @ embed.T
                 return logits, cache
 
             self._prefill_fns[key] = jax.jit(prefill)
-        return self._prefill_fns[key](self.layers, self.embed, tokens, cache)
+        if lengths is None:
+            return self._prefill_fns[key](self.layers, self.embed, tokens, cache)
+        return self._prefill_fns[key](
+            self.layers, self.embed, tokens, cache, lengths
+        )
 
     def decode(self, tokens, cache, index):
         if self._decode_fn is None:
@@ -81,3 +106,61 @@ class GalaxyHMPExecutor:
 
             self._decode_fn = jax.jit(decode)
         return self._decode_fn(self.layers, self.embed, tokens, cache, index)
+
+    # --- paged protocol -------------------------------------------------------
+    @property
+    def supports_paged(self) -> bool:
+        return True
+
+    def make_pool(self, num_pages: int, page_size: int) -> List[Dict]:
+        return hmp.make_paged_kv_cache(
+            num_pages, page_size, len(self.layers), self.mesh, self.plan,
+            dtype=self.embed.dtype,
+        )
+
+    def prefill_paged(self, tokens, pool, block_row, length: int):
+        """Prefill one request (batch 1, tokens padded to the mesh multiple)
+        writing prompt KV straight into this request's pool pages."""
+        b, s = tokens.shape
+        key = ("paged", s)
+        if key not in self._prefill_fns:
+            if s % self.plan.num_devices:
+                raise ValueError(
+                    f"paged prefill needs tokens padded to the mesh size "
+                    f"({self.plan.num_devices}); got length {s}"
+                )
+            mesh, plan, overlap = self.mesh, self.plan, self.overlap
+
+            # length stays a traced scalar so every prompt sharing this
+            # padded shape reuses one compiled program
+            def prefill(layers, embed, tokens, pool, block_row, length):
+                x = embed[tokens]  # (1, S_pad, d)
+                y, pool = hmp.hmp_prefill_paged(
+                    layers, x, mesh, pool, block_row, plan=plan, overlap=overlap
+                )
+                logits = y[:, length - 1] @ embed.T
+                return logits, pool
+
+            # donate the pool so the page scatter happens in place
+            self._prefill_fns[key] = jax.jit(prefill, donate_argnums=(3,))
+        return self._prefill_fns[key](
+            self.layers, self.embed, tokens, pool, block_row,
+            jnp.asarray(length, jnp.int32),
+        )
+
+    def decode_paged(self, tokens, pool, block_table, positions):
+        if self._decode_paged_fn is None:
+            mesh, plan = self.mesh, self.plan
+
+            def decode(layers, embed, tokens, pool, block_table, positions):
+                x = embed[tokens]  # (S, 1, d)
+                y, pool = hmp.hmp_decode_paged(
+                    layers, x, mesh, pool, block_table, positions, plan=plan
+                )
+                logits = y[:, -1] @ embed.T
+                return logits, pool
+
+            self._decode_paged_fn = jax.jit(decode, donate_argnums=(3,))
+        return self._decode_paged_fn(
+            self.layers, self.embed, tokens, pool, block_table, positions
+        )

@@ -118,6 +118,31 @@ def make_cache(
     return cache
 
 
+def cache_page_size(pool: Dict) -> int:
+    """Positions per page of a pool built by ``make_cache(num_pages,
+    page_size)`` — the (batch, seq) axes of this module's cache layout read
+    as (page, in-page slot) under the paged serving protocol."""
+    leaf = jax.tree.leaves(pool)[0]
+    return leaf.shape[2] if leaf.ndim == 5 else leaf.shape[1]
+
+
+def map_cache_leaves(pool: Dict, other: Dict, fn) -> Dict:
+    """Apply ``fn(pool_leaf, other_leaf, grouped)`` over an attn-only cache
+    pytree ({"groups": {...}, "tail": {...}} of {"k","v"} leaves) — grouped
+    leaves carry the leading scan-group dim.  This walk owns the schema of
+    ``make_cache`` so paged gather/scatter code stays layout-agnostic."""
+    out: Dict = {"groups": {}, "tail": {}}
+    for key, leaf in pool["groups"].items():
+        out["groups"][key] = {
+            n: fn(leaf[n], other["groups"][key][n], True) for n in leaf
+        }
+    for key, leaf in pool["tail"].items():
+        out["tail"][key] = {
+            n: fn(leaf[n], other["tail"][key][n], False) for n in leaf
+        }
+    return out
+
+
 def cache_bytes(cfg: ModelConfig, batch: int, cache_len: int) -> int:
     tree = make_cache(cfg, batch, cache_len, abstract=True)
     return sum(

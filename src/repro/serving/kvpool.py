@@ -1,0 +1,162 @@
+"""Paged KV pool: host-side page bookkeeping for continuous batching.
+
+The pool owns ``num_pages`` fixed-size KV pages and a block table mapping
+(slot, logical page) -> physical page.  The *storage* for the pages lives
+with the executor (head-sharded exactly like ``core/hmp.py:make_kv_cache``
+for the Galaxy executor, the model-zoo cache pytree for the default
+executor); this class only does the allocation arithmetic, so it is pure
+numpy and can be property-tested without a device.
+
+Page 0 is the **null page**: it is never handed to a request.  Block-table
+rows of idle slots (and the unused tail of every row) point at it, so the
+jitted decode step can scatter/gather with fixed shapes — writes from idle
+slots land in the null page and reads from it are masked out by the
+per-slot length mask.
+
+Admission is reservation-based and therefore deadlock-free: a request is
+admitted only if the pool can cover its *worst-case* page count (prompt +
+max_new_tokens), but pages are physically allocated lazily (prompt pages at
+admission, one page at a time as decode crosses page boundaries).  Freed
+pages return to the free list on retirement and are reused by later
+admissions.
+"""
+from __future__ import annotations
+
+from typing import List, Optional
+
+import numpy as np
+
+NULL_PAGE = 0
+
+
+class PoolExhausted(RuntimeError):
+    """Raised when an allocation violates its reservation (a scheduler bug)."""
+
+
+class PagedKVPool:
+    """Block-table + free-list bookkeeping over a fixed set of KV pages.
+
+    num_pages:  total physical pages, including the reserved null page 0
+    page_size:  positions per page
+    num_slots:  decode slots (rows of the block table)
+    pages_per_slot: block-table width (max logical pages per request)
+    """
+
+    def __init__(self, num_pages: int, page_size: int, num_slots: int,
+                 pages_per_slot: int):
+        if num_pages < 2:
+            raise ValueError("need at least one page beyond the null page")
+        if page_size < 1 or num_slots < 1 or pages_per_slot < 1:
+            raise ValueError("page_size, num_slots, pages_per_slot must be >= 1")
+        self.num_pages = num_pages
+        self.page_size = page_size
+        self.num_slots = num_slots
+        self.pages_per_slot = pages_per_slot
+        # LIFO free list, low pages first out (stable for tests)
+        self._free: List[int] = list(range(num_pages - 1, NULL_PAGE, -1))
+        self.block_table = np.full((num_slots, pages_per_slot), NULL_PAGE, np.int32)
+        self._allocated: List[List[int]] = [[] for _ in range(num_slots)]
+        self._reserved = np.zeros(num_slots, np.int64)
+        self.active = np.zeros(num_slots, bool)
+
+    # --- capacity -------------------------------------------------------------
+    @property
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    @property
+    def reserved_backlog(self) -> int:
+        """Pages promised to active slots but not yet allocated."""
+        return int(sum(
+            self._reserved[s] - len(self._allocated[s])
+            for s in range(self.num_slots) if self.active[s]
+        ))
+
+    @property
+    def available(self) -> int:
+        """Pages a new admission may reserve against."""
+        return self.free_pages - self.reserved_backlog
+
+    def pages_for(self, positions: int) -> int:
+        """Pages needed to hold ``positions`` KV entries."""
+        return -(-positions // self.page_size)
+
+    def can_admit(self, max_positions: int) -> bool:
+        return (self.pages_for(max_positions) <= self.pages_per_slot
+                and self.pages_for(max_positions) <= self.available)
+
+    def free_slot(self) -> Optional[int]:
+        idle = np.flatnonzero(~self.active)
+        return int(idle[0]) if idle.size else None
+
+    # --- lifecycle ------------------------------------------------------------
+    def _take_page(self, slot: int) -> int:
+        if not self._free:
+            raise PoolExhausted(f"slot {slot}: free list empty")
+        page = self._free.pop()
+        row = self._allocated[slot]
+        self.block_table[slot, len(row)] = page
+        row.append(page)
+        return page
+
+    def admit(self, slot: int, initial_positions: int, max_positions: int) -> None:
+        """Reserve ``pages_for(max_positions)`` and allocate the prompt pages."""
+        if self.active[slot]:
+            raise ValueError(f"slot {slot} is already active")
+        need = self.pages_for(max_positions)
+        if need > self.pages_per_slot:
+            raise ValueError(
+                f"request needs {need} pages, block table holds {self.pages_per_slot}"
+            )
+        if need > self.available:
+            raise PoolExhausted(
+                f"admission needs {need} pages, {self.available} available"
+            )
+        if initial_positions > max_positions:
+            raise ValueError("initial_positions exceeds max_positions")
+        self.active[slot] = True
+        self._reserved[slot] = need
+        for _ in range(self.pages_for(initial_positions)):
+            self._take_page(slot)
+
+    def ensure(self, slot: int, position: int) -> None:
+        """Allocate pages (within the reservation) so ``position`` is writable."""
+        if not self.active[slot]:
+            raise ValueError(f"slot {slot} is not active")
+        while len(self._allocated[slot]) * self.page_size <= position:
+            if len(self._allocated[slot]) >= self._reserved[slot]:
+                raise PoolExhausted(
+                    f"slot {slot}: position {position} exceeds reservation "
+                    f"of {int(self._reserved[slot])} pages"
+                )
+            self._take_page(slot)
+
+    def retire(self, slot: int) -> List[int]:
+        """Return the slot's pages to the free list; zero its row."""
+        if not self.active[slot]:
+            raise ValueError(f"slot {slot} is not active")
+        pages = self._allocated[slot]
+        self._free.extend(reversed(pages))
+        self._allocated[slot] = []
+        self._reserved[slot] = 0
+        self.block_table[slot, :] = NULL_PAGE
+        self.active[slot] = False
+        return pages
+
+    # --- invariants (tests) ---------------------------------------------------
+    def check(self) -> None:
+        """Assert no page is leaked, double-allocated, or null-aliased."""
+        held = [p for row in self._allocated for p in row]
+        assert NULL_PAGE not in held, "null page was allocated"
+        assert NULL_PAGE not in self._free, "null page on the free list"
+        seen = set(held)
+        assert len(seen) == len(held), "page double-allocated across slots"
+        assert not (seen & set(self._free)), "allocated page also on free list"
+        assert len(held) + len(self._free) == self.num_pages - 1, "page leak"
+        for s in range(self.num_slots):
+            row = self.block_table[s]
+            n = len(self._allocated[s])
+            assert list(row[:n]) == self._allocated[s], "block table desync"
+            assert np.all(row[n:] == NULL_PAGE), "stale block-table tail"
+            if not self.active[s]:
+                assert n == 0 and self._reserved[s] == 0, "idle slot holds pages"

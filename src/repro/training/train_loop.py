@@ -7,14 +7,12 @@ GSPMD emits partial sums + a small AllReduce instead of gathering
 """
 from __future__ import annotations
 
-import functools
 from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
-from repro.models import params as params_lib
 from repro.models.sharding import Rules, axis_rules, constrain
 from repro.models.transformer import apply_model
 from repro.training.optimizer import AdamW

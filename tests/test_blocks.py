@@ -10,7 +10,6 @@ import pytest
 pytest.importorskip("hypothesis", reason="property tests need hypothesis")
 from hypothesis import given, settings, strategies as st  # noqa: E402
 
-from repro.configs import get_config, reduced
 from repro.models.attention import _window_cache_positions, causal_window_mask
 from repro.models.moe import moe_apply, moe_capacity
 from repro.models.rglru import rglru_scan

@@ -5,7 +5,7 @@ import jax
 import jax.numpy as jnp
 import pytest
 
-from repro.configs import ASSIGNED_ARCHS, all_configs, get_config, reduced
+from repro.configs import ASSIGNED_ARCHS, all_configs, get_config
 from repro.models import apply_model, init_params
 from repro.models.params import padded_vocab
 from repro.training import AdamW, cosine_schedule, make_train_step

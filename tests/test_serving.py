@@ -1,7 +1,6 @@
 """Serving engine: wave scheduling, greedy determinism, cache bytes."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.models import apply_model, init_params
 from repro.serving import Request, SamplerConfig, ServingEngine, cache_bytes, make_cache
@@ -62,6 +61,61 @@ def test_eos_stops_early():
     eng.submit(Request(uid=1, prompt=[1, 2, 3, 4], max_new_tokens=8, eos_id=first))
     r = eng.run()[0]
     assert r.output == [first]
+
+
+def test_scheduler_auto_uses_continuous_batching():
+    """The default executor implements the paged protocol, so "auto"
+    resolves to continuous batching — and still matches the wave path's
+    greedy tokens while spending fewer decode steps on a skewed mix."""
+    cfg = smoke_cfg("qwen1.5-0.5b")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+
+    def run(scheduler):
+        eng = ServingEngine(params, cfg, max_batch=2, max_len=32,
+                            scheduler=scheduler, page_size=4)
+        for i in range(6):
+            eng.submit(Request(uid=i, prompt=[1 + i] * 8,
+                               max_new_tokens=12 if i % 3 == 0 else 2))
+        return {r.uid: r.output for r in eng.run()}, eng.stats
+
+    auto, auto_stats = run("auto")
+    wave, wave_stats = run("wave")
+    assert auto == wave
+    assert auto_stats["decode_steps"] < wave_stats["decode_steps"]
+
+
+def test_zero_budget_request_emits_nothing_on_both_schedulers():
+    """max_new_tokens=0, a prompt filling max_len, or a prompt *exceeding*
+    max_len all yield an empty output on both paths (never reaching the
+    executor), even when batched with live wave-mates."""
+    cfg = smoke_cfg("qwen1.5-0.5b")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+
+    def run(scheduler):
+        eng = ServingEngine(params, cfg, max_batch=4, max_len=16,
+                            scheduler=scheduler, page_size=4)
+        eng.submit(Request(uid=0, prompt=[1] * 8, max_new_tokens=0))
+        eng.submit(Request(uid=1, prompt=[2] * 8, max_new_tokens=4))
+        eng.submit(Request(uid=2, prompt=list(range(1, 17)), max_new_tokens=4))
+        eng.submit(Request(uid=3, prompt=list(range(1, 21)), max_new_tokens=4))
+        return {r.uid: r.output for r in eng.run()}
+
+    wave = run("wave")
+    cont = run("continuous")
+    assert wave == cont
+    assert wave[0] == [] and wave[2] == [] and wave[3] == []
+    assert len(wave[1]) == 4
+
+
+def test_continuous_records_token_times():
+    cfg = smoke_cfg("qwen1.5-0.5b")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    eng = ServingEngine(params, cfg, max_batch=2, max_len=32,
+                        record_times=True)
+    eng.submit(Request(uid=0, prompt=[1, 2, 3, 4], max_new_tokens=4))
+    r = eng.run()[0]
+    assert len(r.token_times) == len(r.output)
+    assert all(b >= a for a, b in zip(r.token_times, r.token_times[1:]))
 
 
 def test_samplers():

@@ -1,6 +1,5 @@
 """Logical-axis rule tables + shape-safe spec generation (the mechanism the
 HMP layout is expressed through)."""
-import jax
 from jax.sharding import PartitionSpec as P
 
 from repro.launch.mesh import make_mesh_compat
@@ -18,7 +17,7 @@ def test_rules_dedup_mesh_axes():
 
 
 def test_shape_safe_drops_nondividing():
-    mesh = make_mesh_compat((1, 1), ("data", "model"))
+    make_mesh_compat((1, 1), ("data", "model"))  # touch jax device state once
     # fake sizes via mapping against a mesh of known shape
     import numpy as np
 

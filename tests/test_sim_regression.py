@@ -1,0 +1,122 @@
+"""Simulated-latency regression gate.
+
+Scores canonical ExecPlans with ``simulate_execplan`` against checked-in
+golden latencies (``tests/golden/sim_latency.json``), so cost-model or
+planner changes that blow up simulated latency fail tier-1 instead of
+slipping through as a silent perf regression.  The tolerance is wide
+(±20%): the gate catches blown-up plans and broken cost constants, not
+calibration tweaks.  After an *intentional* cost-model change, regenerate
+with::
+
+    PYTHONPATH=src python tests/test_sim_regression.py --regen
+"""
+import dataclasses
+import json
+import os
+
+import pytest
+
+from repro.configs import get_config
+from repro.core import costmodel, planner
+from repro.core.execplan import ExecPlan
+from repro.core.profiler import AnalyticProfiler
+from repro.core.simulator import simulate_execplan
+
+GOLDEN = os.path.join(os.path.dirname(__file__), "golden", "sim_latency.json")
+TOLERANCE = 0.20
+
+
+def _cluster(caps, mem=1.5e9):
+    return [
+        costmodel.DeviceSpec(f"edge{i}", flops=c * 7.1e9, mem_bw=4.0e9,
+                             memory_budget=mem)
+        for i, c in enumerate(caps)
+    ]
+
+
+def _planned(cfg, devices, seq):
+    prof = AnalyticProfiler(cfg, seq)
+    pl = planner.plan(prof.model_profile(), prof.device_profiles(devices))
+    assert pl.feasible, pl.reason
+    return ExecPlan.from_plan(pl, head_dim=cfg.head_dim, d_model=cfg.d_model)
+
+
+def scenarios():
+    """Canonical (name, eplan, cfg, devices, link, seq) rows.
+
+    One uneven 4-device plan (the paper's heterogeneous testbed shape), an
+    even 4-device split (planner degenerate case), and an 8-device skewed
+    cluster (the serving acceptance mesh)."""
+    cfg1 = dataclasses.replace(get_config("distilbert"), num_layers=1)
+    link = costmodel.mbps(1000)
+    out = []
+
+    devs = _cluster([3.0, 2.0, 2.0, 1.0])
+    out.append(("distilbert_4dev_3221", _planned(cfg1, devs, 128),
+                cfg1, devs, link, 128))
+
+    devs_even = _cluster([1.0, 1.0, 1.0, 1.0])
+    ep_even = ExecPlan.even(4, num_heads=cfg1.num_heads, d_ff=cfg1.d_ff,
+                            head_dim=cfg1.head_dim, d_model=cfg1.d_model)
+    out.append(("distilbert_4dev_even", ep_even, cfg1, devs_even, link, 128))
+
+    devs8 = _cluster([3.0, 2.0, 2.0, 1.0, 4.0, 1.0, 2.0, 3.0])
+    out.append(("distilbert_8dev_skewed", _planned(cfg1, devs8, 256),
+                cfg1, devs8, link, 256))
+    return out
+
+
+def _score(eplan, cfg, devices, link, seq):
+    return {
+        "sync_us": simulate_execplan(
+            eplan, cfg, devices, link, seq, overlap=False).latency * 1e6,
+        "overlap_us": simulate_execplan(
+            eplan, cfg, devices, link, seq, overlap=True).latency * 1e6,
+        "padded_us": simulate_execplan(
+            eplan, cfg, devices, link, seq, overlap=True,
+            padded=True).latency * 1e6,
+    }
+
+
+def _golden():
+    with open(GOLDEN) as f:
+        return json.load(f)
+
+
+@pytest.mark.parametrize("name,eplan,cfg,devices,link,seq",
+                         scenarios(), ids=lambda v: v if isinstance(v, str) else "")
+def test_simulated_latency_within_golden(name, eplan, cfg, devices, link, seq):
+    golden = _golden()
+    assert name in golden, f"no golden entry for {name}; run --regen"
+    got = _score(eplan, cfg, devices, link, seq)
+    for key, want in golden[name].items():
+        have = got[key]
+        assert abs(have - want) <= TOLERANCE * want, (
+            f"{name}/{key}: simulated {have:.1f}us vs golden {want:.1f}us "
+            f"(>{TOLERANCE:.0%} drift) — if the cost-model change is "
+            f"intentional, regenerate tests/golden/sim_latency.json"
+        )
+
+
+def test_golden_covers_all_scenarios():
+    golden = _golden()
+    assert set(golden) == {row[0] for row in scenarios()}
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--regen", action="store_true")
+    if ap.parse_args().regen:
+        data = {
+            name: _score(eplan, cfg, devices, link, seq)
+            for name, eplan, cfg, devices, link, seq in scenarios()
+        }
+        os.makedirs(os.path.dirname(GOLDEN), exist_ok=True)
+        with open(GOLDEN, "w") as f:
+            json.dump(data, f, indent=2, sort_keys=True)
+            f.write("\n")
+        print(f"wrote {GOLDEN}")
+        for name, row in data.items():
+            print(f"  {name}: " + ", ".join(f"{k}={v:.1f}" for k, v in row.items()))

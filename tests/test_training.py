@@ -5,7 +5,6 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.configs import get_config, reduced
 from repro.data import DataConfig, LMDataPipeline
 from repro.models import init_params
 from repro.training import (
