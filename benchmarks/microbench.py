@@ -27,6 +27,57 @@ def _time(fn, *args, iters=5) -> float:
     return (time.perf_counter() - t0) / iters * 1e6  # us
 
 
+def measure_execplan_layers(eplan, seq: int, *, devices: int = 4,
+                            iters: int = 10) -> dict:
+    """Measured per-layer wall time (seconds) of hmp / hmp_ring executing an
+    ExecPlan on forced CPU devices.
+
+    The one measurement harness shared by the execplan benches below and
+    ``experiments/calibrate.py`` (the measured side of the calibration
+    loop), so all three time the identical program: a fresh subprocess with
+    ``--xla_force_host_platform_device_count``, the plan's padded params,
+    the (possibly ragged) sequence layout, warm-up, then ``iters`` timed
+    jitted calls.  Raises on subprocess failure.
+    """
+    code = rf"""
+import jax, jax.numpy as jnp, time
+from repro.core import hmp
+from repro.core.execplan import ExecPlan
+from repro.launch.mesh import make_mesh_compat
+mesh = make_mesh_compat(({devices},), ('model',))
+eplan = ExecPlan(heads={tuple(eplan.heads)}, columns={tuple(eplan.columns)},
+                 head_dim={eplan.head_dim}, d_model={eplan.d_model},
+                 seq_shares={tuple(eplan.seq_shares)})
+p = hmp.init_layer_params(jax.random.PRNGKey(0), eplan.d_model,
+                          eplan.num_heads, eplan.d_ff)
+pp = eplan.pad_layer_params(p)
+x = jax.random.normal(jax.random.PRNGKey(1), (1, {seq}, eplan.d_model))
+xp = eplan.seq_layout({seq}).scatter(x)  # identity for dense layouts
+for name, overlap in [('hmp', False), ('hmp_ring', True)]:
+    f = jax.jit(lambda p, x, o=overlap: hmp.hmp_layer(p, x, mesh, overlap=o,
+                                                      plan=eplan, seq={seq}))
+    out = f(pp, xp); jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range({iters}):
+        out = f(pp, xp)
+    jax.block_until_ready(out)
+    print(f"{{name}},{{(time.perf_counter()-t0)/{iters}:.9f}}")
+"""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    proc = subprocess.run([sys.executable, "-c", code], env=env,
+                          capture_output=True, text=True, timeout=600)
+    if proc.returncode != 0:
+        raise RuntimeError(
+            f"execplan measurement subprocess failed:\n{proc.stderr[-2000:]}"
+        )
+    return {
+        name: float(sec)
+        for name, sec in (ln.split(",") for ln in proc.stdout.strip().splitlines())
+    }
+
+
 def kernel_fusion() -> Iterator[Row]:
     """fused_connective (1 HBM pass) vs unfused dropout+residual+LN."""
     from repro.kernels.ops import fused_connective
@@ -153,40 +204,69 @@ def execplan_uneven() -> Iterator[Row]:
                f"simulated,{eplan.describe()}" if not padded else
                "simulated,every device runs max(units)")
 
-    code = rf"""
-import jax, jax.numpy as jnp, time
-from repro.core import hmp
-from repro.core.execplan import ExecPlan
-from repro.launch.mesh import make_mesh_compat
-mesh = make_mesh_compat((4,), ('model',))
-eplan = ExecPlan(heads={tuple(eplan.heads)}, columns={tuple(eplan.columns)},
-                 head_dim={eplan.head_dim}, d_model={eplan.d_model})
-p = hmp.init_layer_params(jax.random.PRNGKey(0), eplan.d_model,
-                          eplan.num_heads, eplan.d_ff)
-pp = eplan.pad_layer_params(p)
-x = jax.random.normal(jax.random.PRNGKey(1), (1, {seq}, eplan.d_model))
-for name, overlap in [('hmp', False), ('hmp_ring', True)]:
-    f = jax.jit(lambda p, x, o=overlap: hmp.hmp_layer(p, x, mesh, overlap=o,
-                                                      plan=eplan))
-    out = f(pp, x); jax.block_until_ready(out)
-    t0 = time.perf_counter()
-    for _ in range(10):
-        out = f(pp, x)
-    jax.block_until_ready(out)
-    print(f"{{name}},{{(time.perf_counter()-t0)/10*1e6:.1f}}")
-"""
-    env = dict(os.environ)
-    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
-    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
-    proc = subprocess.run([sys.executable, "-c", code], env=env,
-                          capture_output=True, text=True, timeout=600)
-    if proc.returncode != 0:
-        yield ("micro/execplan", float("nan"), "subprocess failed")
-        return
-    for line in proc.stdout.strip().splitlines():
-        name, us = line.split(",")
-        yield (f"micro/execplan_{name}", float(us),
+    # measurement failures propagate: the CI bench-smoke --strict gate's
+    # contract is "fails on exceptions", same as execplan_raggedsp below
+    measured = measure_execplan_layers(eplan, seq)
+    for name, sec in measured.items():
+        yield (f"micro/execplan_{name}", sec * 1e6,
                f"measured,heads={list(eplan.heads)},cols={list(eplan.columns)}")
+
+
+def execplan_raggedsp() -> Iterator[Row]:
+    """Ragged sequence parallelism: equal vs bandwidth-aware seq split.
+
+    A 3:2:2:1 DistilBert cluster with one slow link (100 Mbps against
+    1 Gbps elsewhere): the planner solves uneven sequence tiles from
+    capacity + link bandwidth (planner.sequence_partition), and the
+    simulator scores both splits over the ragged ring
+    (costmodel.t_ring_exchange).  The bandwidth-aware split keeps large
+    tiles off the slow hop, so it must come out faster; the padded row
+    shows what the SPMD pad-and-mask emulation of the same plan costs.
+    The ragged plan is then executed for real through hmp / hmp_ring on 4
+    forced CPU devices (measured, exactness asserted in tests).
+    """
+    import dataclasses
+
+    from repro.configs import get_config
+    from repro.core import costmodel
+    from repro.core.execplan import ExecPlan
+    from repro.core.profiler import AnalyticProfiler
+    from repro.core.simulator import simulate_execplan
+
+    seq = 128
+    cfg = dataclasses.replace(get_config("distilbert"), num_layers=1)
+    caps = [3.0, 2.0, 2.0, 1.0]
+    devices = [
+        costmodel.DeviceSpec(f"edge{i}", flops=c * 7.1e9, mem_bw=4.0e9,
+                             memory_budget=1.5e9)
+        for i, c in enumerate(caps)
+    ]
+    links = [costmodel.mbps(1000), costmodel.mbps(1000),
+             costmodel.mbps(100), costmodel.mbps(1000)]
+    prof = AnalyticProfiler(cfg, seq)
+    ep_equal = ExecPlan.from_plan(prof.plan(devices), head_dim=cfg.head_dim,
+                                  d_model=cfg.d_model)
+    ep_aware = ExecPlan.from_plan(prof.plan(devices, links=links),
+                                  head_dim=cfg.head_dim, d_model=cfg.d_model)
+
+    r_eq = simulate_execplan(ep_equal, cfg, devices, links, seq, overlap=True)
+    r_bw = simulate_execplan(ep_aware, cfg, devices, links, seq, overlap=True)
+    r_pad = simulate_execplan(ep_aware, cfg, devices, links, seq,
+                              overlap=True, padded=True)
+    yield ("sim/raggedsp_equal_seq", r_eq.latency * 1e6,
+           "simulated,slow link carries full tiles")
+    yield ("sim/raggedsp_bandwidth_aware", r_bw.latency * 1e6,
+           f"simulated,tiles={list(ep_aware.seq_tiles(seq))},"
+           f"speedup={r_eq.latency / r_bw.latency:.2f}x")
+    yield ("sim/raggedsp_bandwidth_aware_padded", r_pad.latency * 1e6,
+           f"simulated,SPMD ships max tile,sp_waste="
+           f"{ep_aware.seq_padding_waste():.1%}")
+
+    measured = measure_execplan_layers(ep_aware, seq)
+    for name, sec in measured.items():
+        yield (f"micro/raggedsp_{name}", sec * 1e6,
+               f"measured,tiles={list(ep_aware.seq_tiles(seq))},"
+               f"padded rows per device={ep_aware.seq_tile(seq)}")
 
 
 def continuous_vs_wave() -> Iterator[Row]:
@@ -319,5 +399,5 @@ print(f"page_bytes,{ep.kv_page_bytes(8)},{ep.describe()}")
 
 
 ALL = [kernel_fusion, flash_vs_naive, profiler_blocks,
-       hmp_schedules_multidevice, execplan_uneven,
+       hmp_schedules_multidevice, execplan_uneven, execplan_raggedsp,
        continuous_vs_wave, continuous_vs_wave_galaxy]

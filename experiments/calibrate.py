@@ -1,0 +1,149 @@
+"""Measured-vs-simulated calibration loop (ROADMAP item).
+
+``benchmarks/microbench.py:execplan_uneven`` reports the simulator's score
+and the measured wall time of the *same* uneven ExecPlan; this experiment
+closes the loop: it measures hmp / hmp_ring per-layer wall times on this
+host (forced CPU devices), then hillclimbs the cost-model constants of a
+"host device" (effective FLOP/s, memory bandwidth, the emulated
+interconnect's bandwidth/latency, and the simulator's TILE_OVERHEAD) until
+``simulate_execplan`` reproduces the measurements.  Residuals are squared
+log-ratios, so over- and under-prediction weigh equally.
+
+Run:  PYTHONPATH=src python experiments/calibrate.py
+
+Writes experiments/calibration.json with the fitted constants, the loss
+trajectory, and per-scenario residuals.  The fitted ``tile_overhead`` can
+be fed back via ``costmodel.apply_calibration({"TILE_OVERHEAD": ...})``;
+the host device/link constants parameterize future simulate() calls that
+score this host instead of a Jetson cluster.
+"""
+import dataclasses
+import json
+import math
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from experiments.hillclimb import coordinate_hillclimb  # noqa: E402
+
+# starting guesses for a laptop/CI-class host running 4 forced XLA CPU
+# devices: per-"device" FLOP/s, memory bandwidth, and the shared-memory
+# "interconnect" XLA emulates for ppermute/collectives
+DEFAULT_CONSTANTS = {
+    "host_flops": 2.0e10,
+    "host_bw": 1.0e10,
+    "link_bw": 5.0e9,
+    "link_lat": 1e-4,
+    "tile_overhead": 0.05,
+}
+
+SEQ = 128
+CAPS = [3.0, 2.0, 2.0, 1.0]
+
+
+def _plan_and_cfg():
+    from repro.configs import get_config
+    from repro.core import costmodel
+    from repro.core.execplan import ExecPlan
+    from repro.core.profiler import AnalyticProfiler
+
+    cfg = dataclasses.replace(get_config("distilbert"), num_layers=1)
+    devices = [
+        costmodel.DeviceSpec(f"edge{i}", flops=c * 7.1e9, mem_bw=4.0e9,
+                             memory_budget=1.5e9)
+        for i, c in enumerate(CAPS)
+    ]
+    prof = AnalyticProfiler(cfg, SEQ)
+    eplan = ExecPlan.from_plan(prof.plan(devices), head_dim=cfg.head_dim,
+                               d_model=cfg.d_model)
+    return cfg, eplan
+
+
+def measure() -> dict:
+    """Wall time (seconds/layer) of hmp / hmp_ring for the canonical uneven
+    plan on 4 forced CPU devices — the measured side of the residuals.
+    Uses the same harness as the execplan benches, so calibration closes
+    the loop on exactly what ``benchmarks/run.py`` reports."""
+    from benchmarks.microbench import measure_execplan_layers
+
+    _, eplan = _plan_and_cfg()
+    return measure_execplan_layers(eplan, SEQ)
+
+
+def simulated(constants: dict) -> dict:
+    """Simulate the same plan on a cluster of host-modeled devices."""
+    from repro.core import costmodel
+    from repro.core.simulator import simulate_execplan
+
+    cfg, eplan = _plan_and_cfg()
+    devices = [
+        costmodel.DeviceSpec(f"host{i}", flops=constants["host_flops"],
+                             mem_bw=constants["host_bw"], memory_budget=1e12)
+        for i in range(len(CAPS))
+    ]
+    link = costmodel.LinkSpec(bandwidth=constants["link_bw"],
+                              latency=constants["link_lat"])
+    previous = costmodel.apply_calibration(
+        {"TILE_OVERHEAD": constants["tile_overhead"]})
+    try:
+        # padded=True: the host really executes the SPMD pad-and-mask program
+        return {
+            "hmp": simulate_execplan(eplan, cfg, devices, link, SEQ,
+                                     overlap=False, padded=True).latency,
+            "hmp_ring": simulate_execplan(eplan, cfg, devices, link, SEQ,
+                                          overlap=True, padded=True).latency,
+        }
+    finally:
+        costmodel.apply_calibration(previous)
+
+
+def residual_loss(constants: dict, measured: dict) -> float:
+    sim = simulated(constants)
+    return sum(
+        math.log(sim[k] / measured[k]) ** 2 for k in measured
+    )
+
+
+def calibrate(measured: dict = None, *, rounds: int = 8,
+              verbose: bool = False) -> dict:
+    """Fit the host constants to the measured residuals; returns a report.
+
+    ``measured`` may be injected (tests pass synthetic timings to avoid the
+    device subprocess); None measures this host for real.
+    """
+    measured = measured if measured is not None else measure()
+    start_loss = residual_loss(DEFAULT_CONSTANTS, measured)
+    best, best_loss = coordinate_hillclimb(
+        lambda c: residual_loss(c, measured), DEFAULT_CONSTANTS,
+        rounds=rounds, verbose=verbose,
+    )
+    sim = simulated(best)
+    return {
+        "measured_s": measured,
+        "simulated_s": sim,
+        "constants": best,
+        "start_loss": start_loss,
+        "loss": best_loss,
+        "residual_ratio": {k: sim[k] / measured[k] for k in measured},
+    }
+
+
+def main() -> int:
+    report = calibrate(verbose=True)
+    out = os.path.join(os.path.dirname(__file__), "calibration.json")
+    with open(out, "w") as f:
+        json.dump(report, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"wrote {out}")
+    for k, v in report["measured_s"].items():
+        print(f"  {k}: measured {v*1e3:.2f}ms  simulated "
+              f"{report['simulated_s'][k]*1e3:.2f}ms "
+              f"(x{report['residual_ratio'][k]:.2f})")
+    print(f"  loss {report['start_loss']:.3f} -> {report['loss']:.3f}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -22,6 +22,35 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 from repro.launch import dryrun
 
 
+def coordinate_hillclimb(loss_fn, params, *, factors=(0.5, 0.8, 1.25, 2.0),
+                         rounds=8, verbose=False):
+    """Generic multiplicative coordinate descent over named scalar params.
+
+    Repeatedly tries scaling each parameter by each factor, keeping any
+    move that lowers ``loss_fn(params)``; stops after ``rounds`` sweeps or
+    when no single move improves.  Returns ``(best_params, best_loss)``.
+    Used by experiments/calibrate.py to fit cost-model constants to the
+    measured microbench residuals — the same hypothesis -> change ->
+    measure -> validate loop as the dry-run variants below, but automated.
+    """
+    best = dict(params)
+    best_loss = loss_fn(best)
+    for _ in range(rounds):
+        improved = False
+        for name in list(best):
+            for f in factors:
+                cand = dict(best)
+                cand[name] = best[name] * f
+                loss = loss_fn(cand)
+                if loss < best_loss - 1e-12:
+                    best, best_loss, improved = cand, loss, True
+                    if verbose:
+                        print(f"  {name} x{f} -> loss {loss:.4f}", flush=True)
+        if not improved:
+            break
+    return best, best_loss
+
+
 def report(tag, r):
     print(
         f"[{tag}] tc={r['t_compute_s']:.4f} tm={r['t_memory_s']:.4f} "

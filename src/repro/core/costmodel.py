@@ -13,7 +13,7 @@ TPU v5e constants are the roofline terms' denominators (task spec):
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict
+from typing import Dict, List, Sequence, Union
 
 from repro.configs.base import ModelConfig
 
@@ -71,6 +71,52 @@ class LinkSpec:
 
 def mbps(x: float) -> LinkSpec:
     return LinkSpec(bandwidth=x * 1e6 / 8)
+
+
+# A cluster's links can be heterogeneous: ``Links`` is either one LinkSpec
+# (every hop identical, the pre-ragged behavior) or one LinkSpec per device —
+# entry i is the *outgoing* link of ring device i (i -> i+1 mod D).
+Links = Union[LinkSpec, Sequence[LinkSpec]]
+
+
+def as_ring_links(link: Links, d: int) -> List[LinkSpec]:
+    """Normalize to one outgoing LinkSpec per ring device."""
+    if isinstance(link, LinkSpec):
+        return [link] * d
+    links = list(link)
+    if len(links) != d:
+        raise ValueError(f"{len(links)} links for a ring of {d} devices")
+    return links
+
+
+def bottleneck_link(link: Links, d: int) -> LinkSpec:
+    """Slowest hop: what gates a synchronized full-tensor ring collective."""
+    return min(as_ring_links(link, d), key=lambda l: l.bandwidth)
+
+
+def t_ring_exchange(tile_bytes: Sequence[float], link: Links) -> float:
+    """Total time of one D-1-step ring rotation of (possibly uneven) tiles.
+
+    At step r device i forwards the tile originally owned by device
+    (i - r) mod D over its outgoing link; the step completes when the
+    slowest (tile bytes / link) pair finishes.  With equal tiles and a
+    uniform link this reduces exactly to ``t_allgather``/``t_reducescatter``
+    of the concatenated tensor.  Uneven tiles are the ragged-SP case: a
+    real edge deployment sends only each tile's valid rows (point-to-point
+    transports carry exact sizes), so a bandwidth-aware seq split shrinks
+    the bytes crossing slow links.
+    """
+    d = len(tile_bytes)
+    if d <= 1:
+        return 0.0
+    links = as_ring_links(link, d)
+    total = 0.0
+    for r in range(d - 1):
+        total += max(
+            tile_bytes[(i - r) % d] / links[i].bandwidth + links[i].latency
+            for i in range(d)
+        )
+    return total
 
 
 # --- TPU v5e (roofline targets) -------------------------------------------------
@@ -132,3 +178,32 @@ def model_memory_bytes(cfg: ModelConfig) -> float:
     prof = layer_profile(cfg, 1)
     embed = cfg.vocab_size * cfg.d_model * BYTES_FP16
     return cfg.num_layers * (prof["m_att"] + prof["m_mlp"]) + embed
+
+
+# --- calibration hooks (experiments/calibrate.py) ----------------------------
+
+# constants the measured-vs-simulated loop may override, and where they live;
+# TILE_OVERHEAD belongs to the simulator (which imports this module) so it is
+# resolved lazily to avoid a load-time cycle
+_CALIBRATABLE = ("GFLOPS_PER_GHZ", "NANO_MEM_BW", "BYTES_ACT", "TILE_OVERHEAD")
+
+
+def apply_calibration(overrides: Dict[str, float]) -> Dict[str, float]:
+    """Override calibratable cost-model constants; returns the previous
+    values so a calibration experiment can restore them (try/finally)."""
+    unknown = set(overrides) - set(_CALIBRATABLE)
+    if unknown:  # validate everything before touching anything (atomic)
+        raise ValueError(
+            f"{sorted(unknown)} are not calibratable (one of {_CALIBRATABLE})"
+        )
+    previous: Dict[str, float] = {}
+    for name, value in overrides.items():
+        if name == "TILE_OVERHEAD":
+            from repro.core import simulator
+
+            previous[name] = simulator.TILE_OVERHEAD
+            simulator.TILE_OVERHEAD = float(value)
+        else:
+            previous[name] = globals()[name]
+            globals()[name] = float(value)
+    return previous

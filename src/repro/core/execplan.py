@@ -8,8 +8,11 @@ pad-and-mask materialization:
 * every device's head slice is padded to ``max(heads)`` and every column
   slice to ``max(columns)`` with **zeroed weights**, so the math stays exact
   (zero ``wo`` rows / ``w2`` rows contribute nothing to the block output);
-* the sequence axis stays an equal split (§III-C-2), keeping the ring
-  schedule of ``core/ring.py`` aligned across devices.
+* the sequence axis gets the same treatment (:class:`SeqLayout`): the
+  planner's uneven per-device sequence tiles are padded to ``max(tile)``
+  rows, real rows scattered to per-device offsets, and the pad rows masked
+  out of the ragged ring schedule (``core/ring.py``) and the attention mask
+  — any sequence length runs on any mesh, no divisibility required.
 
 The same ExecPlan object is consumed by the executor (``core/hmp.py``), the
 serving engine (``serving/galaxy.py``), the simulator
@@ -24,6 +27,7 @@ assigned) workload so the simulator can score both views.
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Dict, Sequence, Tuple
 
 import jax
@@ -46,17 +50,113 @@ _PARTITIONED_AXES = {
 
 
 @dataclasses.dataclass(frozen=True)
+class SeqLayout:
+    """Padded ragged layout of one global sequence over the ring devices.
+
+    ``tiles[d]`` real rows belong to device ``d`` (summing to the logical
+    sequence length); every device's shard is padded to ``pad_tile =
+    max(tiles)`` rows so shard_map shapes stay SPMD-equal.  Real position
+    ``p`` lives at padded row ``rows[p]``; pad rows carry no position
+    (``positions == -1``) and are masked out of attention and the ring
+    schedule.  For an equal split of a dividing sequence the layout is
+    *dense* (``is_dense``): scatter/gather are identities and the executor
+    takes the exact pre-ragged code path.
+    """
+
+    tiles: Tuple[int, ...]
+
+    @property
+    def num_devices(self) -> int:
+        return len(self.tiles)
+
+    @property
+    def seq(self) -> int:
+        """Logical (unpadded) sequence length: sum of the valid tiles."""
+        return sum(self.tiles)
+
+    @property
+    def pad_tile(self) -> int:
+        """Rows each device's shard holds after padding."""
+        return max(self.tiles)
+
+    @property
+    def padded_len(self) -> int:
+        return self.num_devices * self.pad_tile
+
+    @property
+    def is_dense(self) -> bool:
+        return self.padded_len == self.seq
+
+    @functools.cached_property
+    def offsets(self) -> np.ndarray:
+        """(D,) first real position owned by each device."""
+        return np.concatenate([[0], np.cumsum(self.tiles)[:-1]]).astype(int)
+
+    @functools.cached_property
+    def rows(self) -> np.ndarray:
+        """(seq,) padded-row index of each real position."""
+        return np.concatenate(
+            [d * self.pad_tile + np.arange(t, dtype=int)
+             for d, t in enumerate(self.tiles)]
+        ) if self.seq else np.zeros(0, int)
+
+    @functools.cached_property
+    def positions(self) -> np.ndarray:
+        """(padded_len,) real position of each padded row; -1 for pad rows."""
+        pos = np.full(self.padded_len, -1, int)
+        pos[self.rows] = np.arange(self.seq)
+        return pos
+
+    @functools.cached_property
+    def valid(self) -> np.ndarray:
+        """(padded_len,) bool: which padded rows hold real positions."""
+        return self.positions >= 0
+
+    def attention_mask(self) -> np.ndarray:
+        """(padded_len, padded_len) bool causal mask in the padded domain.
+
+        Real query rows attend causally to real key rows; pad query rows
+        attend everywhere (their garbage stays confined to pad rows and an
+        all-masked softmax row would go NaN)."""
+        pos = self.positions
+        causal = self.valid[None, :] & (pos[None, :] <= pos[:, None])
+        return np.where(self.valid[:, None], causal, True)
+
+    def scatter(self, x):
+        """(B, seq, ...) real layout -> (B, padded_len, ...) padded layout
+        (pad rows zero).  Identity for dense layouts."""
+        if self.is_dense:
+            return x
+        shape = (x.shape[0], self.padded_len, *x.shape[2:])
+        return jnp.zeros(shape, x.dtype).at[:, self.rows].set(x)
+
+    def gather(self, y):
+        """(B, padded_len, ...) padded layout -> (B, seq, ...) real layout."""
+        if self.is_dense:
+            return y
+        return y[:, self.rows]
+
+    def padding_waste(self) -> float:
+        """Fraction of executed sequence rows that are pad."""
+        return 1.0 - self.seq / self.padded_len
+
+
+@dataclasses.dataclass(frozen=True)
 class ExecPlan:
     """A runnable materialization of one layer-parallel partition.
 
-    heads:   MHA heads assigned per device (sums to the model's head count)
-    columns: MLP columns assigned per device (sums to d_ff)
+    heads:      MHA heads assigned per device (sums to the model's head count)
+    columns:    MLP columns assigned per device (sums to d_ff)
+    seq_shares: relative sequence-tile weights per device (the planner's
+                ``Plan.seq``); empty means the equal split.  Normalized at
+                use; materialized per sequence length by ``seq_layout``.
     """
 
     heads: Tuple[int, ...]
     columns: Tuple[int, ...]
     head_dim: int
     d_model: int
+    seq_shares: Tuple[float, ...] = ()
 
     def __post_init__(self):
         if len(self.heads) != len(self.columns):
@@ -70,6 +170,14 @@ class ExecPlan:
             raise ValueError("shard counts must be non-negative")
         if max(self.heads) == 0 or max(self.columns) == 0:
             raise ValueError("at least one device must hold a nonzero shard")
+        if self.seq_shares:
+            if len(self.seq_shares) != len(self.heads):
+                raise ValueError(
+                    f"seq_shares ({len(self.seq_shares)}) must cover the "
+                    f"same {len(self.heads)} devices"
+                )
+            if min(self.seq_shares) < 0 or sum(self.seq_shares) <= 0:
+                raise ValueError("seq_shares must be non-negative, sum > 0")
 
     # --- constructors ---------------------------------------------------------
     @classmethod
@@ -81,6 +189,7 @@ class ExecPlan:
             columns=tuple(int(b) for b in plan_.mlp),
             head_dim=head_dim,
             d_model=d_model,
+            seq_shares=tuple(float(s) for s in plan_.seq),
         )
 
     @classmethod
@@ -126,19 +235,45 @@ class ExecPlan:
     def is_even(self) -> bool:
         return len(set(self.heads)) == 1 and len(set(self.columns)) == 1
 
+    # --- sequence geometry (ragged SP axis) -----------------------------------
+    @property
+    def seq_fractions(self) -> np.ndarray:
+        """(D,) normalized sequence shares; equal split when unset."""
+        if not self.seq_shares:
+            return np.full(self.num_devices, 1.0 / self.num_devices)
+        s = np.asarray(self.seq_shares, float)
+        return s / s.sum()
+
+    @property
+    def uneven_seq(self) -> bool:
+        f = self.seq_fractions
+        return bool(np.ptp(f) > 1e-12)
+
+    def seq_tiles(self, seq: int) -> Tuple[int, ...]:
+        """Integer per-device sequence tiles for a given length (sum = seq)."""
+        return tuple(
+            int(t) for t in planner._largest_remainder_round(
+                self.seq_fractions * seq, seq)
+        )
+
+    def seq_layout(self, seq: int) -> SeqLayout:
+        """Padded ragged layout of a ``seq``-row sequence under this plan."""
+        return SeqLayout(self.seq_tiles(seq))
+
     def seq_tile(self, seq: int) -> int:
-        """Per-device sequence tile; the SP axis stays an equal split."""
-        n = self.num_devices
-        if seq % n:
-            raise ValueError(
-                f"sequence {seq} does not split evenly over {n} devices; "
-                "pad the sequence to a multiple of the mesh size"
-            )
-        return seq // n
+        """Per-device sequence rows after padding (= the straggler's tile)."""
+        return self.seq_layout(seq).pad_tile
 
     def padded_seq(self, seq: int) -> int:
-        n = self.num_devices
-        return ((seq + n - 1) // n) * n
+        """Global rows of the padded ragged layout (= D * seq_tile)."""
+        return self.seq_layout(seq).padded_len
+
+    @property
+    def seq_grain(self) -> int:
+        """Preferred prompt-length bucketing grain for serving.  Correctness
+        no longer needs any padding — ``seq_layout`` covers every length —
+        so this only bounds the number of distinct compiled prefill shapes."""
+        return self.num_devices
 
     # --- masks ----------------------------------------------------------------
     def head_mask(self) -> np.ndarray:
@@ -234,20 +369,32 @@ class ExecPlan:
         return a, b
 
     def to_planner_plan(self, padded: bool = False) -> planner.Plan:
-        """Re-express as a ``planner.Plan`` for simulator/objective scoring."""
+        """Re-express as a ``planner.Plan`` for simulator/objective scoring.
+
+        ``padded=True`` is the SPMD pad-and-mask view on *every* axis: each
+        device runs ``max(units)`` heads/columns and holds (and ppermutes)
+        the straggler's ``max(fraction)`` sequence tile."""
         n = self.num_devices
         heads = np.full(n, self.pad_heads) if padded else np.asarray(self.heads)
         cols = np.full(n, self.pad_columns) if padded else np.asarray(self.columns)
+        frac = self.seq_fractions
+        seq = np.full(n, float(frac.max())) if padded else frac
         return planner.Plan(
             mha=heads.astype(int), mlp=cols.astype(int),
-            seq=np.full(n, 1.0 / n), feasible=True,
+            seq=seq, feasible=True,
         )
 
     def describe(self) -> str:
+        f = self.seq_fractions
+        if self.uneven_seq:
+            seq = ("seq=[" + ",".join(f"{x:.0%}" for x in f)
+                   + f"] (sp_waste={self.seq_padding_waste():.1%})")
+        else:
+            seq = "seq=equal"
         return (
             f"ExecPlan(n={self.num_devices}, heads={list(self.heads)}"
             f"->pad {self.pad_heads}, columns={list(self.columns)}"
-            f"->pad {self.pad_columns}, waste="
+            f"->pad {self.pad_columns}, {seq}, waste="
             f"{self.padding_waste():.1%})"
         )
 
@@ -256,3 +403,8 @@ class ExecPlan:
         real = self.num_heads + self.d_ff
         executed = self.padded_heads + self.padded_ff
         return 1.0 - real / executed
+
+    def seq_padding_waste(self) -> float:
+        """Fraction of executed sequence rows that are pad, in the large-seq
+        limit (tiles -> shares): 1 - 1 / (D * max(fraction))."""
+        return 1.0 - 1.0 / (self.num_devices * float(self.seq_fractions.max()))

@@ -19,8 +19,16 @@ Heterogeneity-aware execution: every entry point takes an optional
 ``plan: ExecPlan`` (``core/execplan.py``).  The plan materializes the
 planner's *uneven* head/column assignment as padded-and-masked shards —
 each device's slice padded to ``max(units)`` with zeroed weights, so the
-math stays exact while per-device shapes stay SPMD-equal.  Without a plan
-the layer behaves as before (even split, padded == real).
+math stays exact while per-device shapes stay SPMD-equal.  The SP axis is
+uneven the same way: a plan with ragged ``seq_shares`` runs the sequence
+in a padded ragged layout (``execplan.SeqLayout``) — real rows scattered
+to per-device offsets, pad rows masked out of the ring schedule and the
+attention mask, and K/V written to the cache at *absolute* positions so
+decode never sees the padding.  Callers pass the logical length as
+``seq=`` and the sequence pre-scattered via ``layout.scatter``; with an
+equal split of a dividing length the layout is dense and the code path is
+bit-identical to the pre-ragged one.  Without a plan the layer behaves as
+before (even split, padded == real).
 
 Serving path: ``hmp_prefill`` / ``hmp_decode`` run a *stack* of layers
 through the Galaxy schedule against a head-sharded KV cache — prefill is
@@ -43,7 +51,7 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
-from repro.core.execplan import ExecPlan
+from repro.core.execplan import ExecPlan, SeqLayout
 from repro.core.ring import (
     matmul_ring_reducescatter,
     ring_allgather_matmul,
@@ -110,12 +118,15 @@ def _ln(x, s, b, eps=1e-5):
     return ((xf - mu) * jax.lax.rsqrt(var + eps) * s + b).astype(x.dtype)
 
 
-def _attention(q, k, v):
-    """q,k,v: (B, S, H, hd) -> (B, S, H, hd), causal."""
+def _attention(q, k, v, mask=None):
+    """q,k,v: (B, S, H, hd) -> (B, S, H, hd).  ``mask`` overrides the plain
+    causal mask — a ragged ``SeqLayout`` supplies causality in the padded
+    domain, where pad rows interleave with real positions."""
     hd = q.shape[-1]
     scores = jnp.einsum("bshd,bthd->bhst", q, k).astype(jnp.float32) / np.sqrt(hd)
     s, t = scores.shape[-2], scores.shape[-1]
-    mask = jnp.tril(jnp.ones((s, t), bool), k=t - s)
+    if mask is None:
+        mask = jnp.tril(jnp.ones((s, t), bool), k=t - s)
     scores = jnp.where(mask, scores, -1e30)
     probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
     return jnp.einsum("bhst,bthd->bshd", probs, v)
@@ -144,39 +155,50 @@ def reference_stack(layers: Sequence[Dict], x):
 
 # --- Galaxy HMP (shard_map) ---------------------------------------------------
 
-def _hmp_layer_local(p, x_loc, *, overlap: bool, return_kv: bool = False):
+def _hmp_layer_local(p, x_loc, *, overlap: bool, return_kv: bool = False,
+                     layout: Optional[SeqLayout] = None):
     """Body on one device.  x_loc: (B, S_loc, d) sequence shard; params are
     head/column shards (possibly ExecPlan-padded with zero weights).  TP
     blocks see the full sequence; connective blocks see the local shard
     (paper Fig. 5).  With ``return_kv`` also emits this device's K/V head
-    shards over the full sequence, for prefilling a decode cache."""
+    shards over the full sequence, for prefilling a decode cache.
+
+    ``layout`` (a *ragged* SeqLayout; dense layouts pass None) drives the
+    uneven-SP masking: the ring primitives zero pad rows per step, and the
+    attention mask encodes causality over the padded row order.  Garbage in
+    pad rows stays confined to pad rows — LN and residuals are rowwise, the
+    rings zero their pad inputs, and attention masks pad keys — so every
+    valid row is exact."""
     ag_mm = ring_allgather_matmul if overlap else sync_allgather_matmul
     mm_rs = matmul_ring_reducescatter if overlap else sync_matmul_reducescatter
 
     d_model = x_loc.shape[-1]
     s_loc = x_loc.shape[1]
     h_loc, hd = p["wq"].shape[1], p["wq"].shape[2]
+    valid_sizes = None if layout is None else layout.tiles
+    attn_mask = None if layout is None else jnp.asarray(layout.attention_mask())
 
     # ---- MHA block (TP over heads) ----
     wqkv = jnp.concatenate(
         [p["wq"].reshape(d_model, -1), p["wk"].reshape(d_model, -1),
          p["wv"].reshape(d_model, -1)], axis=1)
-    qkv = ag_mm(x_loc, wqkv, AXIS, tile_size=s_loc)  # AllGather ⊗ GEMM1
+    qkv = ag_mm(x_loc, wqkv, AXIS, tile_size=s_loc,
+                valid_sizes=valid_sizes)  # AllGather ⊗ GEMM1
     q, k, v = jnp.split(qkv, 3, axis=-1)
     shape = (*q.shape[:2], h_loc, hd)
     k, v = k.reshape(shape), v.reshape(shape)
-    attn = _attention(q.reshape(shape), k, v)
+    attn = _attention(q.reshape(shape), k, v, mask=attn_mask)
     attn = attn.reshape(*q.shape[:2], h_loc * hd)
-    g_loc = mm_rs(attn, p["wo"].reshape(-1, d_model), AXIS,
-                  tile_size=s_loc)  # GEMM ⊗ ReduceScatter
+    g_loc = mm_rs(attn, p["wo"].reshape(-1, d_model), AXIS, tile_size=s_loc,
+                  valid_sizes=valid_sizes)  # GEMM ⊗ ReduceScatter
 
     # ---- connective block (SP over local sequence shard) ----
     y_loc = _ln(x_loc + g_loc, p["ln1_s"], p["ln1_b"])
 
     # ---- MLP block (TP over columns) ----
-    h = ag_mm(y_loc, p["w1"], AXIS, tile_size=s_loc)
+    h = ag_mm(y_loc, p["w1"], AXIS, tile_size=s_loc, valid_sizes=valid_sizes)
     h = jax.nn.gelu(h)
-    f_loc = mm_rs(h, p["w2"], AXIS, tile_size=s_loc)
+    f_loc = mm_rs(h, p["w2"], AXIS, tile_size=s_loc, valid_sizes=valid_sizes)
 
     # ---- connective block ----
     out = _ln(y_loc + f_loc, p["ln2_s"], p["ln2_b"])
@@ -185,8 +207,15 @@ def _hmp_layer_local(p, x_loc, *, overlap: bool, return_kv: bool = False):
     return out
 
 
-def _validate_plan(p: Dict, x, mesh: Mesh, plan: Optional[ExecPlan]):
+def _validate_plan(p: Dict, x, mesh: Mesh, plan: Optional[ExecPlan],
+                   seq: Optional[int] = None):
+    """Pad params and resolve the sequence layout for one entry point.
+
+    Returns ``(params, layout)``; ``layout`` is None when there is no plan,
+    no sequence, or the layout is dense (equal tiles fully covering the
+    rows), so the dense path keeps its exact pre-ragged XLA graph."""
     n = mesh.shape[AXIS]
+    layout = None
     if plan is not None:
         if plan.num_devices != n:
             raise ValueError(
@@ -195,21 +224,33 @@ def _validate_plan(p: Dict, x, mesh: Mesh, plan: Optional[ExecPlan]):
             )
         p = plan.ensure_padded(p)
         if x is not None:
-            plan.seq_tile(x.shape[1])  # raises if the SP split is uneven
-    return p
+            layout = plan.seq_layout(seq if seq is not None else x.shape[1])
+            if x.shape[1] != layout.padded_len:
+                raise ValueError(
+                    f"sequence of {x.shape[1]} rows does not match the "
+                    f"plan's padded ragged layout for seq={layout.seq} "
+                    f"(tiles {list(layout.tiles)} pad to {layout.padded_len} "
+                    f"rows); scatter it with plan.seq_layout(seq).scatter(x) "
+                    f"and pass seq="
+                )
+            if layout.is_dense:
+                layout = None
+    return p, layout
 
 
 def hmp_layer(p: Dict, x, mesh: Mesh, *, overlap: bool = False,
-              plan: Optional[ExecPlan] = None):
-    """Galaxy HMP layer.  x: (B, S, d) global; S must divide the model axis.
+              plan: Optional[ExecPlan] = None, seq: Optional[int] = None):
+    """Galaxy HMP layer.  x: (B, S, d) global.
 
     ``plan`` materializes an uneven planner assignment: reference-layout
-    params are zero-padded per device (see ``ExecPlan.pad_layer_params``);
-    already-padded params pass through.
+    params are zero-padded per device (see ``ExecPlan.pad_layer_params``).
+    A ragged SP plan (or a non-dividing length) additionally expects ``x``
+    in the plan's padded ragged layout for the logical length ``seq``
+    (``plan.seq_layout(seq).scatter(x)``); dense layouts take ``x`` as-is.
     """
-    p = _validate_plan(p, x, mesh, plan)
+    p, layout = _validate_plan(p, x, mesh, plan, seq=seq)
     fn = shard_map(
-        functools.partial(_hmp_layer_local, overlap=overlap),
+        functools.partial(_hmp_layer_local, overlap=overlap, layout=layout),
         mesh=mesh,
         in_specs=(layer_param_specs(), P(None, AXIS, None)),
         out_specs=P(None, AXIS, None),
@@ -238,23 +279,37 @@ def make_kv_cache(batch: int, cache_len: int, num_layers: int, mesh: Mesh,
     ]
 
 
-def _prefill_layer_local(p, x_loc, ck, cv, *, overlap: bool):
-    y_loc, k, v = _hmp_layer_local(p, x_loc, overlap=overlap, return_kv=True)
+def _prefill_layer_local(p, x_loc, ck, cv, *, overlap: bool,
+                         layout: Optional[SeqLayout] = None):
+    y_loc, k, v = _hmp_layer_local(p, x_loc, overlap=overlap, return_kv=True,
+                                   layout=layout)
+    if layout is not None:
+        # ragged layout: cache rows are *absolute* positions — gather the
+        # valid rows out of the padded order before writing, so decode's
+        # position-indexed reads line up
+        k, v = k[:, layout.rows], v[:, layout.rows]
     ck = jax.lax.dynamic_update_slice(ck, k, (0, 0, 0, 0))
     cv = jax.lax.dynamic_update_slice(cv, v, (0, 0, 0, 0))
     return y_loc, ck, cv
 
 
 def hmp_prefill(layers: Sequence[Dict], x, mesh: Mesh, cache: List[Dict],
-                *, plan: ExecPlan, overlap: bool = False):
+                *, plan: ExecPlan, overlap: bool = False,
+                seq: Optional[int] = None):
     """Run a stack of HMP layers over a prompt, filling the KV cache.
 
-    x: (B, S, d) with S a multiple of the mesh size (pad the prompt; causal
-    masking keeps positions < S_real exact).  Returns (y, cache).
+    x: (B, S, d) — for a dense layout the plain prompt (pad to a dividing
+    length if desired; causal masking keeps real positions exact); for a
+    ragged plan the padded ragged layout of a ``seq``-row prompt
+    (``plan.seq_layout(seq).scatter``).  K/V land in the cache at absolute
+    positions either way.  Returns (y, cache) with y in the same layout
+    as x.
     """
-    layers = [_validate_plan(p, x, mesh, plan) for p in layers]
+    validated = [_validate_plan(p, x, mesh, plan, seq=seq) for p in layers]
+    layers = [p for p, _ in validated]
+    layout = validated[0][1] if validated else None
     fn = shard_map(
-        functools.partial(_prefill_layer_local, overlap=overlap),
+        functools.partial(_prefill_layer_local, overlap=overlap, layout=layout),
         mesh=mesh,
         in_specs=(layer_param_specs(), P(None, AXIS, None), CACHE_SPEC, CACHE_SPEC),
         out_specs=(P(None, AXIS, None), CACHE_SPEC, CACHE_SPEC),
@@ -311,7 +366,7 @@ def hmp_decode(layers: Sequence[Dict], x, mesh: Mesh, cache: List[Dict],
     or (B,) vector of absolute positions (per-slot depths for mixed-length
     waves).  Returns (y, cache) with y replicated.
     """
-    layers = [_validate_plan(p, None, mesh, plan) for p in layers]
+    layers = [_validate_plan(p, None, mesh, plan)[0] for p in layers]
     fn = shard_map(
         _decode_layer_local,
         mesh=mesh,
@@ -356,10 +411,16 @@ def make_paged_kv_cache(num_pages: int, page_size: int, num_layers: int,
     ]
 
 
-def _prefill_paged_layer_local(p, x_loc, pk, pv, phys, within, *, overlap):
+def _prefill_paged_layer_local(p, x_loc, pk, pv, phys, within, *, overlap,
+                               layout: Optional[SeqLayout] = None):
     """Prefill one layer and scatter its K/V head shards straight into pool
-    pages.  phys/within: (S,) physical page and in-page slot per position."""
-    y_loc, k, v = _hmp_layer_local(p, x_loc, overlap=overlap, return_kv=True)
+    pages.  phys/within: (S,) physical page and in-page slot per *absolute*
+    position; under a ragged layout the valid rows are gathered out of the
+    padded order first, so pad rows never touch the pool."""
+    y_loc, k, v = _hmp_layer_local(p, x_loc, overlap=overlap, return_kv=True,
+                                   layout=layout)
+    if layout is not None:
+        k, v = k[:, layout.rows], v[:, layout.rows]
     pk = pk.at[phys, within].set(k[0])
     pv = pv.at[phys, within].set(v[0])
     return y_loc, pk, pv
@@ -367,18 +428,22 @@ def _prefill_paged_layer_local(p, x_loc, pk, pv, phys, within, *, overlap):
 
 def hmp_prefill_paged(layers: Sequence[Dict], x, mesh: Mesh,
                       pages: List[Dict], block_row, *, plan: ExecPlan,
-                      overlap: bool = False):
+                      overlap: bool = False, seq: Optional[int] = None):
     """Run a stack of HMP layers over one prompt, writing KV into pool pages.
 
-    x: (1, S, d) with S a multiple of the mesh size (padded prompt; padded
-    positions write garbage KV that decode overwrites before reading, same
-    as the dense path).  block_row: (pages_per_slot,) physical page ids for
-    this request's logical pages.  Returns (y, pages).
+    x: (1, S, d) — the (bucket-padded) prompt for a dense layout, or the
+    plan's padded ragged layout of a ``seq``-row prompt.  Bucket-padding
+    positions beyond the real prompt write zero-token KV that decode
+    overwrites before reading, same as before.  block_row:
+    (pages_per_slot,) physical page ids for this request's logical pages.
+    Returns (y, pages).
     """
     if x.shape[0] != 1:
         raise ValueError("paged prefill is per-request: batch must be 1")
-    layers = [_validate_plan(p, x, mesh, plan) for p in layers]
-    s = x.shape[1]
+    validated = [_validate_plan(p, x, mesh, plan, seq=seq) for p in layers]
+    layers = [p for p, _ in validated]
+    layout = validated[0][1] if validated else None
+    s = x.shape[1] if layout is None else layout.seq
     page_size = pages[0]["k"].shape[1]
     if s > block_row.shape[0] * page_size:
         raise ValueError(
@@ -389,7 +454,8 @@ def hmp_prefill_paged(layers: Sequence[Dict], x, mesh: Mesh,
     phys = block_row[pos // page_size].astype(jnp.int32)
     within = (pos % page_size).astype(jnp.int32)
     fn = shard_map(
-        functools.partial(_prefill_paged_layer_local, overlap=overlap),
+        functools.partial(_prefill_paged_layer_local, overlap=overlap,
+                          layout=layout),
         mesh=mesh,
         in_specs=(layer_param_specs(), P(None, AXIS, None),
                   PAGED_CACHE_SPEC, PAGED_CACHE_SPEC, P(), P()),
@@ -448,7 +514,7 @@ def hmp_decode_paged(layers: Sequence[Dict], x, mesh: Mesh,
     int32; positions: (S,) int32 per-slot absolute positions.  Returns
     (y, pages) with y replicated.
     """
-    layers = [_validate_plan(p, None, mesh, plan) for p in layers]
+    layers = [_validate_plan(p, None, mesh, plan)[0] for p in layers]
     fn = shard_map(
         _decode_paged_layer_local,
         mesh=mesh,
@@ -486,7 +552,7 @@ def _megatron_layer_local(p, x):
 
 
 def megatron_layer(p: Dict, x, mesh: Mesh, *, plan: Optional[ExecPlan] = None):
-    p = _validate_plan(p, None, mesh, plan)
+    p, _ = _validate_plan(p, None, mesh, plan)
     fn = shard_map(
         _megatron_layer_local,
         mesh=mesh,

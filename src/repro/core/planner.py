@@ -11,8 +11,15 @@ Two-step heuristic, faithful to the paper:
    then MHA (lines 21-22).  If OOM persists, the cluster cannot host the
    model: planning fails (lines 23-24).
 
-SP (connective blocks) is an equal split (§III-C-2): its latency is memory-
-bandwidth-bound, and uniform tiles keep the ring-overlap schedule aligned.
+SP (connective blocks) defaults to the paper's equal split (§III-C-2), but
+the paper's own premise — bandwidth- *and* compute-heterogeneous edge
+clusters — makes that the wrong answer when links are skewed: every ring
+step is gated by the slowest (tile, link) pair.  ``sequence_partition``
+extends Alg. 1 to the SP axis: per-device sequence tiles start proportional
+to compute capacity, then a greedy local search shifts rows to minimize the
+straggler connective time plus the ragged-ring exchange time over the given
+per-device ``LinkSpec``s (``plan(..., links=...)``).  The executor runs the
+resulting uneven tiles as a padded ragged layout (``execplan.SeqLayout``).
 
 On a homogeneous TPU mesh the proportional step degenerates to an equal
 split; the planner's memory-aware half then answers "how many chips does
@@ -126,15 +133,124 @@ def memory_aware_balancing(
     return memory_aware_balancing(units, unit_mem, v, budgets, other_mem, next_active)
 
 
-def plan(model: ModelProfile, devices: Sequence[DeviceProfile]) -> Plan:
-    """Full Algorithm 1."""
+def sequence_partition(
+    seq_units: int,
+    capacities: Sequence[float],
+    links=None,
+    *,
+    unit_bytes: float = 1.0,
+    unit_con_time: Optional[Sequence[float]] = None,
+    rotations: int = 4,
+) -> np.ndarray:
+    """Per-device sequence tiles from compute capacity *and* link bandwidth.
+
+    seq_units:     rows of the planning sequence to distribute
+    capacities:    V_d (Eq. 6) per device
+    links:         per-device outgoing ``costmodel.LinkSpec`` (ring order) or
+                   one spec for all; None keeps the capacity-proportional
+                   split (the paper's §III-C-2 behavior, generalized from
+                   equal to proportional)
+    unit_bytes:    activation bytes one sequence row moves per ring hop.
+                   With the default proxy ``unit_con_time`` the cost is
+                   scale-invariant in it, so the default of 1.0 works; it
+                   must carry real bytes once ``unit_con_time`` is given in
+                   absolute seconds.  Must be positive when links are given
+                   (a zero would silently disable the bandwidth term).
+    unit_con_time: seconds of connective work one row costs on each device
+                   (con is memory-bandwidth-bound; the profiler supplies
+                   ``con_bytes_per_row / mem_bw``).  Defaults to a proxy
+                   that scales like the link-byte time and inversely with
+                   capacity, so the search cannot degenerate to parking the
+                   whole sequence behind the fastest link.
+
+    Minimizes ``max_d(tiles_d * con_d) + rotations * t_ring_exchange(...)``
+    — the straggler connective block plus the per-layer ring rotations
+    (4 collective⊗GEMM pairs, paper §III-D) — by greedy row moves from a
+    capacity-proportional start.  Zero tiles are legal output: a device
+    behind a dead-slow link can end up holding no sequence rows while still
+    serving its TP head/column shards.
+    """
+    v = np.asarray(capacities, dtype=float)
+    tiles = _largest_remainder_round(v / v.sum() * seq_units, seq_units)
+    if links is None or seq_units <= 0 or len(v) <= 1:
+        return tiles
+    if unit_bytes <= 0:
+        raise ValueError(
+            "unit_bytes must be positive when links are given — a zero "
+            "byte weight makes the cost constant and silently returns the "
+            "capacity-proportional split"
+        )
+
+    from repro.core import costmodel  # here to keep planner import-light
+
+    ring = costmodel.as_ring_links(links, len(v))
+    if unit_con_time is None:
+        bw = np.mean([l.bandwidth for l in ring])
+        con = (unit_bytes / max(bw, 1e-30)) * (v.mean() / v)
+    else:
+        con = np.asarray(unit_con_time, dtype=float)
+
+    def cost(t: np.ndarray) -> float:
+        t_con = float(np.max(t * con))
+        comm = costmodel.t_ring_exchange(t * unit_bytes, ring)
+        return t_con + rotations * comm
+
+    best = tiles.astype(int)
+    best_cost = cost(best)
+    n = len(best)
+    step = max(1, seq_units // (4 * n))
+    while True:
+        improved = False
+        for src in range(n):
+            if best[src] < step:
+                continue
+            for dst in range(n):
+                if dst == src:
+                    continue
+                cand = best.copy()
+                cand[src] -= step
+                cand[dst] += step
+                c = cost(cand)
+                if c < best_cost - 1e-15:
+                    best, best_cost, improved = cand, c, True
+        if not improved:
+            if step == 1:
+                break
+            step = max(1, step // 2)
+    return best
+
+
+def plan(
+    model: ModelProfile,
+    devices: Sequence[DeviceProfile],
+    links=None,
+    *,
+    seq_units: int = 0,
+    unit_bytes: float = 1.0,
+    unit_con_time: Optional[Sequence[float]] = None,
+) -> Plan:
+    """Full Algorithm 1 (+ the ragged-SP extension when ``links`` is given).
+
+    Without ``links`` the SP axis stays the equal split of §III-C-2.  With
+    per-device links, ``sequence_partition`` solves uneven sequence tiles
+    over ``seq_units`` rows (the planning sequence length) and ``Plan.seq``
+    carries the resulting fractions.
+    """
     v = [d.capacity for d in devices]
     budgets = [d.memory_budget for d in devices]
     n = len(devices)
 
     a = balanced_partition(model.num_heads, v)        # line 7
     b = balanced_partition(model.mlp_columns, v)      # line 8
-    seq = np.full(n, 1.0 / n)                         # §III-C-2: equal SP split
+    if links is None:
+        seq = np.full(n, 1.0 / n)                     # §III-C-2: equal SP split
+    else:
+        units = seq_units or 32 * n
+        tiles = sequence_partition(
+            units, v, links, unit_bytes=unit_bytes,
+            unit_con_time=unit_con_time,
+        )
+        seq = tiles.astype(float) / units
 
     att_unit = model.num_layers * model.m_att / model.num_heads
     mlp_unit = model.num_layers * model.m_mlp / model.mlp_columns

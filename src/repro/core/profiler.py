@@ -63,6 +63,29 @@ class AnalyticProfiler:
             return frac * self.prof["con_bytes"] / dev.mem_bw
         raise ValueError(block)
 
+    def seq_cost_args(self, devices: Sequence[DeviceSpec]) -> Dict[str, object]:
+        """Per-row costs of the SP axis, for ``planner.sequence_partition``:
+        activation bytes one row moves per ring hop, and the seconds of
+        (memory-bandwidth-bound) connective work one row costs per device."""
+        return {
+            "unit_bytes": self.prof["act_bytes"] / self.seq,
+            "unit_con_time": [
+                (self.prof["con_bytes"] / self.seq) / d.mem_bw for d in devices
+            ],
+        }
+
+    def plan(self, devices: Sequence[DeviceSpec], links=None):
+        """Run Algorithm 1 from this profile; with per-device ``links``
+        (``costmodel.LinkSpec``) the SP axis is solved bandwidth-aware over
+        this profiler's sequence length (ragged sequence tiles)."""
+        from repro.core import planner
+
+        kwargs = {}
+        if links is not None:
+            kwargs = dict(seq_units=self.seq, **self.seq_cost_args(devices))
+        return planner.plan(self.model_profile(), self.device_profiles(devices),
+                            links, **kwargs)
+
 
 class HostProfiler:
     """Times real jitted MHA/MLP blocks on the current host (calibration-

@@ -18,19 +18,60 @@ global sequence.  Shape mismatches raise ``ValueError`` at trace time — a
 Python ``assert`` would vanish under ``-O`` and produce an opaque XLA shape
 error for jit users.
 
-Both are bitwise-consistent with the unoverlapped collective versions up to
+Ragged sequence parallelism (uneven per-device tiles) rides the same
+schedule through *padded* tiles with per-step valid-length masking:
+
+* every device's shard is padded to ``tile_size = max(tiles)`` rows and the
+  ring ppermutes whole padded tiles (SPMD shapes must stay equal — a real
+  point-to-point deployment would send only the valid rows, which is what
+  ``costmodel.t_ring_exchange`` scores);
+* ``valid_sizes[d]`` names how many rows of device ``d``'s tile are real,
+  in ring order.  At each step the receiver zeroes the pad rows of the tile
+  it currently holds before the GEMM, so pad rows contribute exactly zero
+  to every output and the math stays exact — including zero-sized tiles
+  (a device behind a dead-slow link may own no sequence rows at all).
+
+The global padded layout (which padded row holds which real position) is
+owned by ``execplan.SeqLayout``; this module only needs the per-device
+valid counts.
+
+All four functions are bitwise-consistent with each other up to
 floating-point summation order (the ring fixes a deterministic order).
 """
 from __future__ import annotations
 
-from typing import Optional
+from typing import Optional, Sequence
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 
 def _perm(axis_size: int, shift: int = 1):
     return [(i, (i + shift) % axis_size) for i in range(axis_size)]
+
+
+def _check_valid_sizes(valid_sizes: Optional[Sequence[int]], d: int,
+                       tile_size: int) -> Optional[np.ndarray]:
+    """Normalize the per-device valid row counts of a ragged ring.
+
+    Returns None when masking is a no-op (no ragged info, or every tile is
+    fully valid) so the dense path keeps its exact pre-ragged XLA graph.
+    """
+    if valid_sizes is None:
+        return None
+    vs = np.asarray(valid_sizes, int)
+    if vs.shape != (d,):
+        raise ValueError(
+            f"valid_sizes covers {vs.size} devices but the ring has {d}"
+        )
+    if vs.min() < 0 or vs.max() > tile_size:
+        raise ValueError(
+            f"valid_sizes {vs.tolist()} must lie in [0, tile_size={tile_size}]"
+        )
+    if (vs == tile_size).all():
+        return None
+    return vs
 
 
 def _axis_size(axis_name: str) -> int:
@@ -42,14 +83,19 @@ def _axis_size(axis_name: str) -> int:
 
 
 def ring_allgather_matmul(x_local, w_local, axis_name: str,
-                          *, tile_size: Optional[int] = None):
+                          *, tile_size: Optional[int] = None,
+                          valid_sizes: Optional[Sequence[int]] = None):
     """Overlapped computation of ``all_gather(x, seq) @ w_local``.
 
     x_local: (B, S_loc, d)   — this device's sequence tile (paper's H_i)
     w_local: (d, F_loc)      — this device's column shard (paper's W_i^D)
     tile_size: sequence rows per ring tile; defaults to ``S_loc`` and must
                equal it (every device contributes one tile per ring step).
-    returns: (B, D*tile_size, F_loc) — full-sequence activation, local columns.
+    valid_sizes: ragged SP — real rows of each device's padded tile, in
+               ring order; pad rows of every received tile are zeroed
+               before the GEMM so the output's pad rows are exactly zero.
+    returns: (B, D*tile_size, F_loc) — full-sequence activation (padded
+             layout when ragged), local columns.
 
     Step r computes the GEMM for the tile received r hops ago while the next
     tile is in flight; the final step does no communication (paper §III-D-1).
@@ -64,13 +110,19 @@ def ring_allgather_matmul(x_local, w_local, axis_name: str,
             f"local sequence tile is {s_loc} rows but tile_size={tile_size}; "
             "the ring AllGather moves whole local tiles"
         )
+    vs = _check_valid_sizes(valid_sizes, d, tile_size)
     f_loc = w_local.shape[1]
 
     out = jnp.zeros((b, d * tile_size, f_loc), x_local.dtype)
     tile = x_local
     for r in range(d):
         src = jnp.mod(idx - r, d)  # owner of the tile we hold at step r
-        part = jnp.einsum("bsd,df->bsf", tile, w_local)
+        if vs is not None:
+            row_ok = jnp.arange(tile_size) < jnp.asarray(vs)[src]
+            gemm_in = jnp.where(row_ok[None, :, None], tile, 0)
+        else:
+            gemm_in = tile
+        part = jnp.einsum("bsd,df->bsf", gemm_in, w_local)
         out = jax.lax.dynamic_update_slice(out, part, (0, src * tile_size, 0))
         if r != d - 1:
             # send current tile forward; receive the next from the ring
@@ -79,13 +131,17 @@ def ring_allgather_matmul(x_local, w_local, axis_name: str,
 
 
 def matmul_ring_reducescatter(h_local, w_local, axis_name: str,
-                              *, tile_size: Optional[int] = None):
+                              *, tile_size: Optional[int] = None,
+                              valid_sizes: Optional[Sequence[int]] = None):
     """Overlapped computation of ``psum_scatter(h_local @ w_local, seq)``.
 
     h_local: (B, S, F_loc)   — full sequence, this device's column shard (E_i)
     w_local: (F_loc, d)      — row shard of the second GEMM (W_i^E)
     tile_size: rows of the output tile each device ends up owning; defaults
                to ``S // D`` and must satisfy ``D * tile_size == S``.
+    valid_sizes: ragged SP — real rows of each device's output tile; pad
+               rows are zeroed going into every per-step GEMM, so each
+               device's pad rows come back exactly zero.
     returns: (B, tile_size, d) — this device's sequence tile of the summed
              output.
 
@@ -101,7 +157,8 @@ def matmul_ring_reducescatter(h_local, w_local, axis_name: str,
         if s % d:
             raise ValueError(
                 f"sequence {s} does not divide over a ring of {d} devices; "
-                "pass tile_size (or pad the sequence to a multiple of the mesh)"
+                "pass tile_size, or run a ragged layout (ExecPlan.seq_layout "
+                "-> tile_size=pad_tile, valid_sizes=tiles)"
             )
         tile_size = s // d
     elif d * tile_size != s:
@@ -109,6 +166,7 @@ def matmul_ring_reducescatter(h_local, w_local, axis_name: str,
             f"tile_size={tile_size} x {d} devices != sequence {s}; the ring "
             "ReduceScatter consumes exactly one tile per device per step"
         )
+    vs = _check_valid_sizes(valid_sizes, d, tile_size)
 
     acc = None
     for r in range(d):
@@ -116,6 +174,9 @@ def matmul_ring_reducescatter(h_local, w_local, axis_name: str,
         tile = jax.lax.dynamic_slice(
             h_local, (0, t * tile_size, 0), (b, tile_size, h_local.shape[2])
         )
+        if vs is not None:
+            row_ok = jnp.arange(tile_size) < jnp.asarray(vs)[t]
+            tile = jnp.where(row_ok[None, :, None], tile, 0)
         part = jnp.einsum("bsf,fd->bsd", tile, w_local)
         if acc is None:
             acc = part
@@ -126,19 +187,31 @@ def matmul_ring_reducescatter(h_local, w_local, axis_name: str,
 
 # --- unoverlapped references (the paper's "sync" baseline schedule) -----------
 
+def _global_valid_mask(vs: np.ndarray, tile_size: int) -> np.ndarray:
+    """(D*tile_size,) bool: valid rows of the concatenated padded layout."""
+    return np.concatenate([np.arange(tile_size) < v for v in vs])
+
+
 def sync_allgather_matmul(x_local, w_local, axis_name: str,
-                          *, tile_size: Optional[int] = None):
+                          *, tile_size: Optional[int] = None,
+                          valid_sizes: Optional[Sequence[int]] = None):
     if tile_size is not None and tile_size != x_local.shape[1]:
         raise ValueError(
             f"local sequence tile is {x_local.shape[1]} rows but "
             f"tile_size={tile_size}"
         )
+    d = _axis_size(axis_name)
+    vs = _check_valid_sizes(valid_sizes, d, x_local.shape[1])
     xg = jax.lax.all_gather(x_local, axis_name, axis=1, tiled=True)
+    if vs is not None:
+        mask = _global_valid_mask(vs, x_local.shape[1])
+        xg = jnp.where(jnp.asarray(mask)[None, :, None], xg, 0)
     return jnp.einsum("bsd,df->bsf", xg, w_local)
 
 
 def sync_matmul_reducescatter(h_local, w_local, axis_name: str,
-                              *, tile_size: Optional[int] = None):
+                              *, tile_size: Optional[int] = None,
+                              valid_sizes: Optional[Sequence[int]] = None):
     d = _axis_size(axis_name)
     s = h_local.shape[1]
     if (tile_size is None and s % d) or (
@@ -147,5 +220,9 @@ def sync_matmul_reducescatter(h_local, w_local, axis_name: str,
             f"sequence {s} does not split into {d} equal scatter tiles"
             + (f" of {tile_size}" if tile_size is not None else "")
         )
+    vs = _check_valid_sizes(valid_sizes, d, s // d)
+    if vs is not None:
+        mask = _global_valid_mask(vs, s // d)
+        h_local = jnp.where(jnp.asarray(mask)[None, :, None], h_local, 0)
     out = jnp.einsum("bsf,fd->bsd", h_local, w_local)
     return jax.lax.psum_scatter(out, axis_name, scatter_dimension=1, tiled=True)

@@ -11,6 +11,15 @@ Schedules simulated:
 The ring-overlap saving per collective⊗GEMM pair is (D-1)·min(c, g) where c
 is the per-hop transfer time and g the per-tile GEMM time — the schedule of
 Figs. 6/7 (D GEMM tiles overlapping D-1 hops).
+
+Ragged sequence parallelism: the galaxy schedules score a plan's *uneven*
+sequence fractions (``Plan.seq``) — the connective block runs at each
+device's own tile, and the ring rotations are costed per step as the
+slowest (held tile, outgoing link) pair (``costmodel.t_ring_exchange``),
+over per-device ``LinkSpec``s when ``link`` is a sequence.  A real edge
+transport sends only each tile's valid rows, so this is the measured-system
+view; the padded SPMD emulation is scored by ``simulate_execplan(padded=
+True)``, where every device holds (and ships) the straggler's tile.
 """
 from __future__ import annotations
 
@@ -61,12 +70,16 @@ def _overlap_layer_time(compute_total: float, comm_total: float, d: int) -> floa
 def simulate(
     cfg: ModelConfig,
     devices: Sequence[DeviceSpec],
-    link: LinkSpec,
+    link: costmodel.Links,
     seq: int,
     schedule: str,
     plan: Optional[planner.Plan] = None,
 ) -> SimResult:
     """Score one schedule on a simulated edge cluster.
+
+    ``link`` is one LinkSpec for a uniform interconnect or one per device
+    (ring order, outgoing).  Non-galaxy schedules move whole tensors every
+    step, so heterogeneous links reduce to the bottleneck hop for them.
 
     ``plan`` (galaxy schedules only) scores an externally supplied partition
     — e.g. one re-expressed from an ``ExecPlan`` — instead of re-running the
@@ -75,6 +88,8 @@ def simulate(
     if plan is not None and schedule not in ("galaxy", "galaxy_overlap"):
         raise ValueError(f"plan= only applies to galaxy schedules, not {schedule!r}")
     d_n = len(devices)
+    links = costmodel.as_ring_links(link, d_n)
+    link = costmodel.bottleneck_link(links, d_n)
     prof = AnalyticProfiler(cfg, seq)
     p = prof.prof
     l = cfg.num_layers
@@ -132,6 +147,7 @@ def simulate(
         # padded ExecPlans, where every device executes max(units).
         a_frac = pl.mha / model_profile.num_heads
         b_frac = pl.mlp / model_profile.mlp_columns
+        seq_frac = np.asarray(pl.seq, dtype=float)
         per_dev = (
             model_profile.num_layers
             * (model_profile.m_att * a_frac + model_profile.m_mlp * b_frac)
@@ -149,9 +165,15 @@ def simulate(
         mlp2_flops = 2 * seq * dm * cfg.d_ff
 
         t_attn_core = np.max(a_frac * attn_core / flops)
-        t_con = np.max(p["con_bytes"] / d_n / bws)
+        # connective blocks run at each device's own (possibly uneven)
+        # sequence tile, memory-bandwidth-bound
+        t_con = np.max(seq_frac * p["con_bytes"] / bws)
 
-        c_step = (act / d_n) / link.bandwidth + link.latency
+        # each ring rotation moves the per-device sequence tiles; a step is
+        # gated by the slowest (held tile, outgoing link) pair.  For equal
+        # tiles on a uniform link this equals the old closed forms.
+        tile_bytes = seq_frac * act
+        t_rotation = costmodel.t_ring_exchange(tile_bytes, links)
         pairs = [
             (qkv_flops, a_frac),   # AllGather ⊗ QKV GEMM
             (wo_flops, a_frac),    # WO GEMM ⊗ ReduceScatter
@@ -160,13 +182,10 @@ def simulate(
         ]
         t_gemms = sum(np.max(fl * fr / flops) for fl, fr in pairs)
         if schedule == "galaxy":
-            t_comm = 2 * (
-                costmodel.t_reducescatter(act, d_n, link)
-                + costmodel.t_allgather(act, d_n, link)
-            )
+            t_comm = 4 * t_rotation  # 2 AllGathers + 2 ReduceScatters
             t_layer = t_attn_core + t_gemms + t_con + t_comm
         else:
-            comm_total = 4 * (d_n - 1) * c_step  # hops of all 4 ring pairs
+            comm_total = 4 * t_rotation  # hops of all 4 ring pairs
             t_layer = _overlap_layer_time(
                 t_attn_core + t_gemms + t_con, comm_total, d_n
             )
@@ -183,7 +202,7 @@ def simulate_execplan(
     eplan: ExecPlan,
     cfg: ModelConfig,
     devices: Sequence[DeviceSpec],
-    link: LinkSpec,
+    link: costmodel.Links,
     seq: int,
     *,
     overlap: bool = True,
@@ -193,8 +212,9 @@ def simulate_execplan(
 
     ``padded=False`` scores the planner's assigned workload (paper Eq. 4/5);
     ``padded=True`` scores the SPMD pad-and-mask execution, where every
-    device runs ``max(units)`` dense units — the price of expressing uneven
-    shards as equal-shaped shards.  Comparing the two quantifies the padding
+    device runs ``max(units)`` dense units and ships the straggler's
+    ``max(fraction)`` sequence tile — the price of expressing uneven shards
+    as equal-shaped shards.  Comparing the two quantifies the padding
     overhead of a given plan; ``benchmarks/microbench.py`` reports both next
     to the measured wall time of the same plan.
     """

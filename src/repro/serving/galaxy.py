@@ -14,11 +14,16 @@ prefill scatters prompt KV straight into this request's pages, decode
 gathers each slot's pages through the block table *inside* the shard_map,
 so every device only ever touches its own head shard of the pool.
 
-Prompts whose length does not divide the mesh are right-padded to the next
-multiple (``prompt_pad_multiple``, the engine's padding policy hook);
-causal masking keeps all real positions exact, and each decode step
-overwrites its own cache slot/page entry before attending, so the padded
-prefill rows are never read.
+Sequence layout is plan-derived: prefill scatters the prompt into the
+plan's padded ragged layout (``ExecPlan.seq_layout`` — per-device sequence
+tiles at per-device offsets, padded to the straggler's tile), so uneven
+*sequence* plans run end to end and no prompt length depends on mesh
+divisibility for correctness.  ``prompt_pad_multiple`` (the engine's
+padding policy hook) is likewise plan-derived (``ExecPlan.seq_grain``) and
+now only buckets prompt lengths to bound the number of compiled prefill
+shapes.  K/V are written at absolute positions, and each decode step
+overwrites its own cache slot/page entry before attending, so bucket
+padding rows are never read.
 """
 from __future__ import annotations
 
@@ -54,13 +59,18 @@ class GalaxyHMPExecutor:
     # --- padding policy -------------------------------------------------------
     @property
     def prompt_pad_multiple(self) -> int:
-        """SP prefill shards the sequence: prompts pad to the mesh size."""
-        return self.plan.num_devices
+        """Plan-derived prompt bucketing grain.  The ragged SP layout makes
+        any length correct; bucketing only bounds compiled prefill shapes."""
+        return self.plan.seq_grain
 
     # --- wave protocol --------------------------------------------------------
     def make_cache(self, batch: int, max_len: int) -> List[Dict]:
-        # round up so prefill sequence tiles always fit the cache
-        cache_len = self.plan.padded_seq(max_len)
+        # cache rows are *absolute* positions (ragged prefill gathers valid
+        # rows before writing), so the cache only needs the largest bucketed
+        # prompt length — not the plan's padded ragged extent, which for a
+        # strongly uneven seq split would over-allocate KV by max(frac)*D
+        grain = self.plan.seq_grain
+        cache_len = -(-max_len // grain) * grain
         return hmp.make_kv_cache(
             batch, cache_len, len(self.layers), self.mesh, self.plan,
             dtype=self.embed.dtype,
@@ -68,19 +78,25 @@ class GalaxyHMPExecutor:
 
     def prefill(self, tokens, cache, lengths=None):
         """Prefill a wave.  ``lengths`` (B,) gathers each row's last real
-        logit when the wave mixes prompt lengths (rows right-padded)."""
+        logit when the wave mixes prompt lengths (rows right-padded).
+
+        The prompt is scattered into the plan's padded ragged layout at
+        per-device offsets (identity for an equal split of a dividing
+        length) and the output gathered back, so uneven sequence tiles and
+        non-dividing lengths run exactly."""
         b, s = tokens.shape
         key = (b, s, lengths is not None)
         if key not in self._prefill_fns:
-            s_pad = self.plan.padded_seq(s)
+            layout = self.plan.seq_layout(s)
             mesh, plan, overlap = self.mesh, self.plan, self.overlap
 
             def prefill(layers, embed, tokens, cache, lengths=None):
-                tokens = jnp.pad(tokens, ((0, 0), (0, s_pad - s)))
-                x = embed[tokens]  # (B, S_pad, d)
+                tokens = layout.scatter(tokens)  # identity when dense
+                x = embed[tokens]  # (B, padded, d)
                 y, cache = hmp.hmp_prefill(
-                    layers, x, mesh, cache, plan=plan, overlap=overlap
+                    layers, x, mesh, cache, plan=plan, overlap=overlap, seq=s
                 )
+                y = layout.gather(y)  # back to real positions
                 if lengths is None:
                     logits = y[:, s - 1] @ embed.T
                 else:
@@ -119,25 +135,24 @@ class GalaxyHMPExecutor:
         )
 
     def prefill_paged(self, tokens, pool, block_row, length: int):
-        """Prefill one request (batch 1, tokens padded to the mesh multiple)
+        """Prefill one request (batch 1, tokens bucket-padded by the engine)
         writing prompt KV straight into this request's pool pages."""
         b, s = tokens.shape
         key = ("paged", s)
         if key not in self._prefill_fns:
-            if s % self.plan.num_devices:
-                raise ValueError(
-                    f"paged prefill needs tokens padded to the mesh size "
-                    f"({self.plan.num_devices}); got length {s}"
-                )
+            layout = self.plan.seq_layout(s)
             mesh, plan, overlap = self.mesh, self.plan, self.overlap
 
             # length stays a traced scalar so every prompt sharing this
             # padded shape reuses one compiled program
             def prefill(layers, embed, tokens, pool, block_row, length):
-                x = embed[tokens]  # (1, S_pad, d)
+                tokens = layout.scatter(tokens)  # identity when dense
+                x = embed[tokens]  # (1, padded, d)
                 y, pool = hmp.hmp_prefill_paged(
-                    layers, x, mesh, pool, block_row, plan=plan, overlap=overlap
+                    layers, x, mesh, pool, block_row, plan=plan,
+                    overlap=overlap, seq=s
                 )
+                y = layout.gather(y)
                 logits = y[:, length - 1] @ embed.T
                 return logits, pool
 

@@ -1,0 +1,53 @@
+"""Smoke test of the measured-vs-simulated calibration loop.
+
+Injects synthetic "measurements" (the simulator's own output under known
+perturbed constants) so no multi-device subprocess is needed: the hillclimb
+must drive the residual loss (close to) zero and recover simulated times
+near the targets.
+"""
+import numpy as np
+
+from experiments.calibrate import DEFAULT_CONSTANTS, calibrate, simulated
+from experiments.hillclimb import coordinate_hillclimb
+
+
+def test_coordinate_hillclimb_minimizes_quadratic():
+    best, loss = coordinate_hillclimb(
+        lambda p: (p["a"] - 4.0) ** 2 + (p["b"] - 0.25) ** 2,
+        {"a": 1.0, "b": 1.0},
+    )
+    assert loss < 0.05
+    assert abs(best["a"] - 4.0) < 0.5 and abs(best["b"] - 0.25) < 0.1
+
+
+def test_calibrate_reduces_residuals():
+    # synthesize measurements from a "true" host 2x slower than the default
+    # guess with a slower interconnect — the loop must close most of the gap
+    true = dict(DEFAULT_CONSTANTS)
+    true["host_flops"] = DEFAULT_CONSTANTS["host_flops"] / 2
+    true["link_bw"] = DEFAULT_CONSTANTS["link_bw"] / 4
+    measured = simulated(true)
+    assert all(v > 0 for v in measured.values())
+
+    report = calibrate(measured=measured, rounds=6)
+    assert report["loss"] < report["start_loss"]
+    assert report["loss"] < 0.05
+    ratios = np.array(list(report["residual_ratio"].values()))
+    assert np.all(np.abs(np.log(ratios)) < 0.25), report["residual_ratio"]
+
+
+def test_calibration_overrides_restore():
+    """apply_calibration returns previous values and round-trips."""
+    from repro.core import costmodel, simulator
+
+    before = simulator.TILE_OVERHEAD
+    prev = costmodel.apply_calibration({"TILE_OVERHEAD": 0.5})
+    assert simulator.TILE_OVERHEAD == 0.5 and prev == {"TILE_OVERHEAD": before}
+    costmodel.apply_calibration(prev)
+    assert simulator.TILE_OVERHEAD == before
+    try:
+        costmodel.apply_calibration({"NOT_A_CONSTANT": 1.0})
+    except ValueError:
+        pass
+    else:
+        raise AssertionError("unknown constant must be rejected")

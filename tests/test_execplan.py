@@ -56,10 +56,13 @@ def test_from_plan_geometry():
     assert not ep.is_even
     assert ep.head_mask().sum() == 16 and ep.column_mask().sum() == 64
     assert 0.3 < ep.padding_waste() < 0.45
+    # planner output keeps the SP axis equal unless links are given
+    assert not ep.uneven_seq and ep.seq_padding_waste() == 0.0
     assert ep.seq_tile(32) == 8
-    with pytest.raises(ValueError):
-        ep.seq_tile(30)
-    assert ep.padded_seq(30) == 32
+    # non-dividing lengths get a ragged layout instead of an error
+    assert ep.seq_tiles(30) == (8, 8, 7, 7)
+    assert ep.seq_tile(30) == 8 and ep.padded_seq(30) == 32
+    assert ep.seq_grain == 4
 
 
 def test_even_plan_is_identity_layout():
@@ -123,6 +126,115 @@ def test_to_planner_plan_fractions():
     assert np.allclose(ap, 6 / 16) and np.allclose(bp, 24 / 64)
     assert ep.to_planner_plan().mha.sum() == 16
     assert np.all(ep.to_planner_plan(padded=True).mha == 6)
+
+
+def _ragged_plan():
+    """3:2:2:1 cluster with uneven heads, columns AND sequence tiles."""
+    return ExecPlan(heads=(6, 4, 4, 2), columns=(24, 16, 16, 8), head_dim=2,
+                    d_model=32, seq_shares=(3.0, 2.0, 2.0, 1.0))
+
+
+def test_seq_layout_geometry():
+    ep = _ragged_plan()
+    assert ep.uneven_seq
+    assert ep.seq_tiles(128) == (48, 32, 32, 16)  # the acceptance split
+    lay = ep.seq_layout(13)
+    assert lay.tiles == (5, 3, 3, 2) and lay.seq == 13
+    assert lay.pad_tile == 5 and lay.padded_len == 20 and not lay.is_dense
+    # rows/positions are inverse maps; pad rows carry -1
+    assert lay.rows.shape == (13,) and lay.positions.shape == (20,)
+    np.testing.assert_array_equal(lay.positions[lay.rows], np.arange(13))
+    assert (lay.positions[~lay.valid] == -1).all()
+    assert lay.valid.sum() == 13
+    np.testing.assert_array_equal(lay.offsets, [0, 5, 8, 11])
+    assert 0 < lay.padding_waste() < 1
+    # padded plan view ships the straggler's fraction on every device
+    padded = ep.to_planner_plan(padded=True)
+    assert np.allclose(padded.seq, 3.0 / 8.0)
+    assert "seq=" in ep.describe() and "sp_waste" in ep.describe()
+
+
+def test_seq_layout_scatter_gather_roundtrip():
+    import jax
+
+    ep = _ragged_plan()
+    lay = ep.seq_layout(13)
+    x = jax.random.normal(jax.random.PRNGKey(0), (2, 13, 4))
+    xp = lay.scatter(x)
+    assert xp.shape == (2, 20, 4)
+    np.testing.assert_allclose(np.asarray(lay.gather(xp)), np.asarray(x))
+    # pad rows are zero after scatter
+    assert not np.any(np.asarray(xp)[:, ~lay.valid])
+    # dense layouts are identities (keeps the pre-ragged XLA graph)
+    dense = ep.seq_layout(16)  # 3:2:2:1 of 16 -> (6,4,4,2), sums to pad? no
+    # 16 * [0.375, .25, .25, .125] = (6,4,4,2): pad_tile 6, padded 24 — ragged
+    assert not dense.is_dense
+    even = ExecPlan.even(4, num_heads=8, d_ff=64, head_dim=4, d_model=32)
+    lay_even = even.seq_layout(16)
+    assert lay_even.is_dense and lay_even.scatter(x) is x
+
+
+def test_seq_layout_attention_mask():
+    lay = _ragged_plan().seq_layout(7)  # tiles (3,2,1,1), pad 3
+    m = lay.attention_mask()
+    pos, valid = lay.positions, lay.valid
+    for i in range(lay.padded_len):
+        for j in range(lay.padded_len):
+            if valid[i]:
+                assert m[i, j] == (valid[j] and pos[j] <= pos[i])
+            else:
+                assert m[i, j]  # pad queries attend everywhere (finite softmax)
+
+
+def test_sequence_partition_bandwidth_aware():
+    """planner.sequence_partition: capacity-proportional without links,
+    shifted off the slow hop with them, loud on a degenerate byte weight."""
+    from repro.core import costmodel
+    from repro.core.planner import sequence_partition
+
+    out = planner.sequence_partition(128, [3.0, 2.0, 2.0, 1.0])
+    assert out.tolist() == [48, 32, 32, 16]
+
+    caps = [1.0, 1.0, 1.0, 1.0]
+    links = [costmodel.mbps(1000), costmodel.mbps(1000),
+             costmodel.mbps(100), costmodel.mbps(1000)]
+    aware = sequence_partition(128, caps, links)  # default unit_bytes works
+    assert aware.sum() == 128 and (aware >= 0).all()
+    # the slow hop 2->3 carries every tile except device 3's: the search
+    # must shift rows onto device 3 to shrink the slow link's traffic
+    assert aware[3] == aware.max() and aware[3] > 32, aware.tolist()
+    # a zero byte weight would silently disable the bandwidth term
+    with pytest.raises(ValueError, match="unit_bytes"):
+        sequence_partition(128, caps, links, unit_bytes=0.0)
+    # uniform links + uniform caps: stays the equal split
+    assert sequence_partition(
+        128, caps, costmodel.mbps(1000)).tolist() == [32, 32, 32, 32]
+
+
+def test_plan_with_links_carries_uneven_seq():
+    from repro.core import costmodel
+
+    links = [costmodel.mbps(1000), costmodel.mbps(1000),
+             costmodel.mbps(100), costmodel.mbps(1000)]
+    model = ModelProfile("tiny", 2, 16, 64, 1e6, 2e6)
+    devs = [DeviceProfile(f"d{i}", 1.0, 1e12) for i in range(4)]
+    pl = planner.plan(model, devs, links, seq_units=128)
+    assert pl.feasible
+    assert np.isclose(pl.seq.sum(), 1.0)
+    assert pl.seq.max() > 0.26  # no longer the equal split
+    # heads/columns are untouched by the SP solve
+    assert pl.mha.sum() == 16 and pl.mlp.sum() == 64
+    ep = ExecPlan.from_plan(pl, head_dim=2, d_model=32)
+    assert ep.uneven_seq
+
+
+def test_seq_shares_validation():
+    with pytest.raises(ValueError, match="seq_shares"):
+        ExecPlan(heads=(4, 4), columns=(8, 8), head_dim=2, d_model=16,
+                 seq_shares=(1.0,))
+    with pytest.raises(ValueError, match="non-negative"):
+        ExecPlan(heads=(4, 4), columns=(8, 8), head_dim=2, d_model=16,
+                 seq_shares=(-1.0, 2.0))
 
 
 # --- multi-device: uneven plans through the real executor --------------------
@@ -319,6 +431,112 @@ def test_serving_engine_galaxy_continuous_batching():
         print('continuous == wave == reference;',
               cont_stats['decode_steps'], 'vs', wave_stats['decode_steps'], 'steps')
     """)
+
+
+def test_uneven_seq_plan_matches_reference():
+    """Acceptance (mirrors the uneven-head case): ragged sequence tiles on
+    4- and 8-device meshes — hmp / hmp_ring under uneven seq_shares match
+    reference_layer for dividing and non-dividing lengths."""
+    run_multidevice("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.core import hmp
+        from repro.core.execplan import ExecPlan
+        from repro.launch.mesh import make_mesh_compat
+
+        cases = [
+            (ExecPlan(heads=(6, 4, 4, 2), columns=(24, 16, 16, 8), head_dim=2,
+                      d_model=32, seq_shares=(3.0, 2.0, 2.0, 1.0)),
+             make_mesh_compat((4,), ('model',), devices=jax.devices()[:4])),
+            (ExecPlan(heads=(3, 2, 2, 1, 4, 1, 2, 1),
+                      columns=(12, 8, 8, 4, 16, 4, 8, 4), head_dim=2,
+                      d_model=32,
+                      seq_shares=(3.0, 2.0, 2.0, 1.0, 4.0, 0.0, 2.0, 3.0)),
+             make_mesh_compat((8,), ('model',))),
+        ]
+        p = hmp.init_layer_params(jax.random.PRNGKey(0), 32, 16, 64)
+        for ep, mesh in cases:
+            assert ep.uneven_seq, ep.describe()
+            for s in (16, 13):
+                lay = ep.seq_layout(s)
+                x = jax.random.normal(jax.random.PRNGKey(1), (2, s, 32)) * 0.5
+                ref = hmp.reference_layer(p, x)
+                xp = lay.scatter(x)
+                for overlap in (False, True):
+                    y = hmp.hmp_layer(p, xp, mesh, overlap=overlap, plan=ep,
+                                      seq=s)
+                    err = float(jnp.abs(lay.gather(y) - ref).max())
+                    assert err < 2e-5, (ep.num_devices, s, overlap, err)
+                    print(ep.num_devices, 'devs seq', s, 'overlap', overlap,
+                          'ok', err)
+    """)
+
+
+def test_uneven_seq_serving_acceptance():
+    """ISSUE acceptance: tiles [48, 32, 32, 16] on a 3:2:2:1 cluster with
+    one slow link — prefill + decode through GalaxyHMPExecutor produce
+    greedy tokens exactly matching the full-context reference, and the
+    simulator scores the bandwidth-aware split below the equal split."""
+    run_multidevice("""
+        import dataclasses
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.core import hmp
+        from repro.core.execplan import ExecPlan
+        from repro.launch.mesh import make_mesh_compat
+        from repro.serving import GalaxyHMPExecutor, Request, ServingEngine
+
+        ep = ExecPlan(heads=(6, 4, 4, 2), columns=(24, 16, 16, 8), head_dim=2,
+                      d_model=32, seq_shares=(3.0, 2.0, 2.0, 1.0))
+        assert ep.seq_tiles(128) == (48, 32, 32, 16), ep.seq_tiles(128)
+        mesh = make_mesh_compat((4,), ('model',))
+
+        vocab, n_layers = 50, 3
+        layers = hmp.init_stack_params(jax.random.PRNGKey(0), n_layers, 32, 16, 64)
+        emb = jax.random.normal(jax.random.PRNGKey(7), (vocab, 32)) * 0.5
+        exe = GalaxyHMPExecutor(layers, emb, ep, mesh, overlap=True)
+        prompts = [[1,2,3,4,5,6,7,8,9,10,11], [4,7,1,9,2,8,3,6,5,10,12],
+                   [3,1,4,1,5,9,2,6], [2,7,1,8]]
+
+        def run(scheduler):
+            eng = ServingEngine(executor=exe, max_batch=3, max_len=24,
+                                scheduler=scheduler, page_size=8)
+            for i, pr in enumerate(prompts):
+                eng.submit(Request(uid=i, prompt=list(pr), max_new_tokens=3 + i))
+            return {r.uid: r.output for r in eng.run()}
+
+        wave, cont = run('wave'), run('continuous')
+        assert wave == cont, (wave, cont)
+        for uid, pr in enumerate(prompts):
+            toks = list(pr)
+            for _ in range(3 + uid):
+                y = hmp.reference_stack(layers, emb[jnp.asarray([toks])])
+                toks.append(int(jnp.argmax(y[:, -1] @ emb.T, -1)[0]))
+            assert cont[uid] == toks[len(pr):], (uid, cont[uid], toks[len(pr):])
+            print('request', uid, 'tokens ok', cont[uid])
+
+        # simulator half of the acceptance: bandwidth-aware < equal
+        from repro.configs import get_config
+        from repro.core import costmodel
+        from repro.core.profiler import AnalyticProfiler
+        from repro.core.simulator import simulate_execplan
+        cfg = dataclasses.replace(get_config('distilbert'), num_layers=1)
+        caps = [3.0, 2.0, 2.0, 1.0]
+        devices = [costmodel.DeviceSpec(f'e{i}', flops=c * 7.1e9, mem_bw=4.0e9,
+                                        memory_budget=1.5e9)
+                   for i, c in enumerate(caps)]
+        links = [costmodel.mbps(1000), costmodel.mbps(1000),
+                 costmodel.mbps(100), costmodel.mbps(1000)]
+        prof = AnalyticProfiler(cfg, 128)
+        ep_eq = ExecPlan.from_plan(prof.plan(devices), head_dim=cfg.head_dim,
+                                   d_model=cfg.d_model)
+        ep_bw = ExecPlan.from_plan(prof.plan(devices, links=links),
+                                   head_dim=cfg.head_dim, d_model=cfg.d_model)
+        assert ep_bw.uneven_seq and not ep_eq.uneven_seq
+        r_eq = simulate_execplan(ep_eq, cfg, devices, links, 128, overlap=True)
+        r_bw = simulate_execplan(ep_bw, cfg, devices, links, 128, overlap=True)
+        assert r_bw.latency < r_eq.latency, (r_bw.latency, r_eq.latency)
+        print(f'sim: aware {r_bw.latency*1e3:.1f}ms < equal '
+              f'{r_eq.latency*1e3:.1f}ms')
+    """, devices=4)
 
 
 def test_ring_tile_size_validation():

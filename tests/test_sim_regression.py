@@ -41,12 +41,22 @@ def _planned(cfg, devices, seq):
     return ExecPlan.from_plan(pl, head_dim=cfg.head_dim, d_model=cfg.d_model)
 
 
+def _planned_ragged(cfg, devices, links, seq):
+    prof = AnalyticProfiler(cfg, seq)
+    pl = prof.plan(devices, links=links)
+    assert pl.feasible, pl.reason
+    ep = ExecPlan.from_plan(pl, head_dim=cfg.head_dim, d_model=cfg.d_model)
+    assert ep.uneven_seq, ep.describe()
+    return ep
+
+
 def scenarios():
     """Canonical (name, eplan, cfg, devices, link, seq) rows.
 
     One uneven 4-device plan (the paper's heterogeneous testbed shape), an
-    even 4-device split (planner degenerate case), and an 8-device skewed
-    cluster (the serving acceptance mesh)."""
+    even 4-device split (planner degenerate case), an 8-device skewed
+    cluster (the serving acceptance mesh), and a ragged-SP plan on a
+    skewed-link cluster (bandwidth-aware uneven sequence tiles)."""
     cfg1 = dataclasses.replace(get_config("distilbert"), num_layers=1)
     link = costmodel.mbps(1000)
     out = []
@@ -63,6 +73,13 @@ def scenarios():
     devs8 = _cluster([3.0, 2.0, 2.0, 1.0, 4.0, 1.0, 2.0, 3.0])
     out.append(("distilbert_8dev_skewed", _planned(cfg1, devs8, 256),
                 cfg1, devs8, link, 256))
+
+    # ragged SP: one 100 Mbps hop in an otherwise 1 Gbps ring
+    skewed_links = [costmodel.mbps(1000), costmodel.mbps(1000),
+                    costmodel.mbps(100), costmodel.mbps(1000)]
+    out.append(("distilbert_4dev_raggedsp",
+                _planned_ragged(cfg1, devs, skewed_links, 128),
+                cfg1, devs, skewed_links, 128))
     return out
 
 
