@@ -174,6 +174,19 @@ def layer_profile(cfg: ModelConfig, seq: int) -> Dict[str, float]:
     }
 
 
+def gemm_unit_flops(d_model: int, head_dim: int) -> Dict[str, float]:
+    """Dense GEMM FLOPs one partition unit costs per sequence row.
+
+    One MHA head: its QKV projection columns (3 x 2·d·hd) plus its WO rows
+    (2·hd·d).  One MLP column: its W1 column (2·d) plus its W2 row (2·d).
+    These are the weights that convert unit counts into the effective-FLOPs
+    view a pad-shedding backend executes (``ExecPlan.device_gemm_flops``,
+    the planner's pad regularizer, and the ``execplan_padshed`` bench all
+    price units with this).
+    """
+    return {"head": 8 * d_model * head_dim, "column": 4 * d_model}
+
+
 def model_memory_bytes(cfg: ModelConfig) -> float:
     prof = layer_profile(cfg, 1)
     embed = cfg.vocab_size * cfg.d_model * BYTES_FP16

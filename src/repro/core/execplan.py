@@ -141,6 +141,16 @@ class SeqLayout:
         return 1.0 - self.seq / self.padded_len
 
 
+# pluggable per-shard compute path — the registry lives with the dispatch
+# (kernels/ops.py), re-exported here for plan-level callers:
+#   "xla"    — padded dense einsums; pad slots are zero weights, every device
+#              executes max(units) dense work (the correctness oracle)
+#   "pallas" — valid-length kernels; per-device valid counts enter as
+#              scalar-prefetch operands and the grids skip pad blocks, so
+#              executed MXU work tracks the assigned units
+from repro.kernels.ops import COMPUTE_BACKENDS  # noqa: E402
+
+
 @dataclasses.dataclass(frozen=True)
 class ExecPlan:
     """A runnable materialization of one layer-parallel partition.
@@ -150,6 +160,8 @@ class ExecPlan:
     seq_shares: relative sequence-tile weights per device (the planner's
                 ``Plan.seq``); empty means the equal split.  Normalized at
                 use; materialized per sequence length by ``seq_layout``.
+    compute_backend: which per-shard compute path the executor runs
+                (``COMPUTE_BACKENDS``); "pallas" sheds pad-block work.
     """
 
     heads: Tuple[int, ...]
@@ -157,8 +169,14 @@ class ExecPlan:
     head_dim: int
     d_model: int
     seq_shares: Tuple[float, ...] = ()
+    compute_backend: str = "xla"
 
     def __post_init__(self):
+        if self.compute_backend not in COMPUTE_BACKENDS:
+            raise ValueError(
+                f"unknown compute_backend {self.compute_backend!r}; "
+                f"one of {COMPUTE_BACKENDS}"
+            )
         if len(self.heads) != len(self.columns):
             raise ValueError(
                 f"heads ({len(self.heads)}) and columns ({len(self.columns)}) "
@@ -181,7 +199,8 @@ class ExecPlan:
 
     # --- constructors ---------------------------------------------------------
     @classmethod
-    def from_plan(cls, plan_: planner.Plan, *, head_dim: int, d_model: int) -> "ExecPlan":
+    def from_plan(cls, plan_: planner.Plan, *, head_dim: int, d_model: int,
+                  compute_backend: str = "xla") -> "ExecPlan":
         if not plan_.feasible:
             raise ValueError(f"cannot materialize an infeasible plan: {plan_.reason}")
         return cls(
@@ -190,7 +209,12 @@ class ExecPlan:
             head_dim=head_dim,
             d_model=d_model,
             seq_shares=tuple(float(s) for s in plan_.seq),
+            compute_backend=compute_backend,
         )
+
+    def with_backend(self, compute_backend: str) -> "ExecPlan":
+        """The same plan routed through another per-shard compute path."""
+        return dataclasses.replace(self, compute_backend=compute_backend)
 
     @classmethod
     def even(cls, n: int, *, num_heads: int, d_ff: int, head_dim: int,
@@ -371,18 +395,50 @@ class ExecPlan:
     def to_planner_plan(self, padded: bool = False) -> planner.Plan:
         """Re-express as a ``planner.Plan`` for simulator/objective scoring.
 
-        ``padded=True`` is the SPMD pad-and-mask view on *every* axis: each
-        device runs ``max(units)`` heads/columns and holds (and ppermutes)
-        the straggler's ``max(fraction)`` sequence tile."""
+        ``padded=True`` is the SPMD execution view.  With the "xla" backend
+        that is pad-and-mask on *every* axis: each device runs
+        ``max(units)`` heads/columns and holds (and ppermutes) the
+        straggler's ``max(fraction)`` sequence tile.  With the "pallas"
+        backend the valid-length kernels shed pad compute, so the compute
+        axes score *effective* units (block-rounding ignored) — only the
+        transport/connective side still carries the straggler's padded
+        sequence tile (SPMD ppermutes whole equal-shaped tiles either
+        way)."""
         n = self.num_devices
-        heads = np.full(n, self.pad_heads) if padded else np.asarray(self.heads)
-        cols = np.full(n, self.pad_columns) if padded else np.asarray(self.columns)
+        shed = padded and self.compute_backend == "pallas"
+        dense = not padded or shed
+        heads = np.asarray(self.heads) if dense else np.full(n, self.pad_heads)
+        cols = np.asarray(self.columns) if dense else np.full(n, self.pad_columns)
         frac = self.seq_fractions
         seq = np.full(n, float(frac.max())) if padded else frac
         return planner.Plan(
             mha=heads.astype(int), mlp=cols.astype(int),
             seq=seq, feasible=True,
         )
+
+    def device_gemm_flops(self, seq: int = 1, padded: bool = False) -> np.ndarray:
+        """(D,) dense per-shard GEMM FLOPs of one layer over ``seq`` rows.
+
+        Units are priced by ``costmodel.gemm_unit_flops``.  ``padded=True``
+        is what a non-shedding SPMD program executes — every device at
+        ``max(units)``; the default is the assigned workload a pad-shedding
+        backend actually runs."""
+        from repro.core import costmodel
+
+        unit = costmodel.gemm_unit_flops(self.d_model, self.head_dim)
+        head_flops, col_flops = unit["head"], unit["column"]
+        heads = np.full(self.num_devices, self.pad_heads) if padded \
+            else np.asarray(self.heads)
+        cols = np.full(self.num_devices, self.pad_columns) if padded \
+            else np.asarray(self.columns)
+        return seq * (heads * head_flops + cols * col_flops).astype(float)
+
+    def flops_shed(self) -> float:
+        """Fraction of padded dense GEMM FLOPs a shedding backend skips
+        (FLOPs-weighted counterpart of the unit-count ``padding_waste``)."""
+        eff = self.device_gemm_flops().sum()
+        pad = self.device_gemm_flops(padded=True).sum()
+        return 1.0 - eff / pad
 
     def describe(self) -> str:
         f = self.seq_fractions
@@ -391,11 +447,15 @@ class ExecPlan:
                    + f"] (sp_waste={self.seq_padding_waste():.1%})")
         else:
             seq = "seq=equal"
+        eff = self.device_gemm_flops()
+        pad = self.device_gemm_flops(padded=True)
+        flops = ",".join(f"{e / p:.0%}" for e, p in zip(eff, pad))
         return (
             f"ExecPlan(n={self.num_devices}, heads={list(self.heads)}"
             f"->pad {self.pad_heads}, columns={list(self.columns)}"
             f"->pad {self.pad_columns}, {seq}, waste="
-            f"{self.padding_waste():.1%})"
+            f"{self.padding_waste():.1%}, eff/pad flops=[{flops}], "
+            f"backend={self.compute_backend})"
         )
 
     def padding_waste(self) -> float:

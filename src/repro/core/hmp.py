@@ -30,6 +30,20 @@ equal split of a dividing length the layout is dense and the code path is
 bit-identical to the pre-ragged one.  Without a plan the layer behaves as
 before (even split, padded == real).
 
+Pluggable per-shard compute (``ExecPlan.compute_backend``): with the
+default ``"xla"`` backend the padded shards run dense einsums — every
+device executes ``max(units)`` work, zeros included (the honesty cost
+``ExecPlan.padding_waste()`` bookkeeps; this path is the correctness
+oracle).  With ``"pallas"`` every per-shard matmul and the prefill
+attention route through ``kernels/ops.py``: per-device valid head/column
+counts enter the valid-length kernels as scalar-prefetch operands and the
+grids *skip* pad blocks, so executed MXU work tracks the plan's assigned
+units.  The decode attention core stays XLA (it is a block-table gather,
+not an MXU-bound GEMM); its projections shed like everything else.
+Pallas inside shard_map needs ``check_rep=False`` (no replication rule for
+``pallas_call``), so that flag flips only on the pallas path and the xla
+graphs stay bit-identical to before.
+
 Serving path: ``hmp_prefill`` / ``hmp_decode`` run a *stack* of layers
 through the Galaxy schedule against a head-sharded KV cache — prefill is
 the full TP/SP + ring program; decode is the single-token degenerate case
@@ -58,6 +72,7 @@ from repro.core.ring import (
     sync_allgather_matmul,
     sync_matmul_reducescatter,
 )
+from repro.kernels import ops
 
 AXIS = "model"
 
@@ -155,8 +170,73 @@ def reference_stack(layers: Sequence[Dict], x):
 
 # --- Galaxy HMP (shard_map) ---------------------------------------------------
 
+class _PallasCompute:
+    """Per-device ragged compute bindings (``compute_backend="pallas"``).
+
+    Built *inside* the shard_map body: ``axis_index`` resolves this
+    device's valid head/column counts, which enter the valid-length
+    kernels (``kernels/ops.py``) as scalar-prefetch operands — the kernel
+    grids skip blocks that are entirely padding, so each device's executed
+    MXU work tracks its assigned ``units[d]``, not ``max(units)``.  The
+    methods double as the ring primitives' per-tile ``gemm`` callbacks
+    (``valid_rows`` is the held tile's real row count in ring order).
+    """
+
+    def __init__(self, plan: ExecPlan, positions: Optional[np.ndarray]):
+        idx = jax.lax.axis_index(AXIS)
+        self.hd = plan.head_dim
+        self.pad_heads = plan.pad_heads
+        self.valid_heads = jnp.asarray(plan.heads, jnp.int32)[idx]
+        self.valid_cols = jnp.asarray(plan.columns, jnp.int32)[idx]
+        self.positions = positions  # padded row -> real position (static)
+
+    def qkv_gemm(self, tile, w, valid_rows=None):
+        # w = [wq | wk | wv]: three column segments, each a padded head
+        # slot block with this device's real heads as the valid prefix
+        return ops.gemm(tile, w, backend="pallas", valid_m=valid_rows,
+                        valid_n=self.valid_heads * self.hd,
+                        seg_n=self.pad_heads * self.hd)
+
+    def wo_gemm(self, tile, w, valid_rows=None):
+        return ops.gemm(tile, w, backend="pallas", valid_m=valid_rows,
+                        valid_k=self.valid_heads * self.hd)
+
+    def w1_gemm(self, tile, w, valid_rows=None):
+        return ops.gemm(tile, w, backend="pallas", valid_m=valid_rows,
+                        valid_n=self.valid_cols)
+
+    def w2_gemm(self, tile, w, valid_rows=None):
+        return ops.gemm(tile, w, backend="pallas", valid_m=valid_rows,
+                        valid_k=self.valid_cols)
+
+    def attention(self, q, k, v):
+        """(B, S, H, hd) ragged flash attention: pad rows and pad head
+        slots are skipped and come out exactly zero."""
+        return ops.ragged_attention(q, k, v, positions=self.positions,
+                                    valid_heads=self.valid_heads)
+
+    def connective(self, x, res, scale, bias):
+        """Fused residual + layernorm (one HBM pass) == ``_ln(res + x)``."""
+        return ops.connective(x, res, scale, bias)
+
+
+def _make_compute(backend: str, plan: Optional[ExecPlan],
+                  layout: Optional[SeqLayout],
+                  seq_total: Optional[int]) -> Optional[_PallasCompute]:
+    if backend != "pallas":
+        return None
+    if layout is not None:
+        positions = layout.positions
+    elif seq_total is not None:
+        positions = np.arange(seq_total)
+    else:
+        positions = None  # decode: attention stays on the XLA gather path
+    return _PallasCompute(plan, positions)
+
+
 def _hmp_layer_local(p, x_loc, *, overlap: bool, return_kv: bool = False,
-                     layout: Optional[SeqLayout] = None):
+                     layout: Optional[SeqLayout] = None,
+                     plan: Optional[ExecPlan] = None, backend: str = "xla"):
     """Body on one device.  x_loc: (B, S_loc, d) sequence shard; params are
     head/column shards (possibly ExecPlan-padded with zero weights).  TP
     blocks see the full sequence; connective blocks see the local shard
@@ -176,32 +256,50 @@ def _hmp_layer_local(p, x_loc, *, overlap: bool, return_kv: bool = False,
     s_loc = x_loc.shape[1]
     h_loc, hd = p["wq"].shape[1], p["wq"].shape[2]
     valid_sizes = None if layout is None else layout.tiles
-    attn_mask = None if layout is None else jnp.asarray(layout.attention_mask())
+    n_dev = plan.num_devices if plan is not None else None
+    compute = _make_compute(backend, plan, layout,
+                            None if n_dev is None else n_dev * s_loc)
+    # the O(padded_len^2) ragged mask feeds only the xla attention path;
+    # the pallas path derives masking from layout.positions in-kernel
+    attn_mask = None if (layout is None or compute is not None) \
+        else jnp.asarray(layout.attention_mask())
 
     # ---- MHA block (TP over heads) ----
     wqkv = jnp.concatenate(
         [p["wq"].reshape(d_model, -1), p["wk"].reshape(d_model, -1),
          p["wv"].reshape(d_model, -1)], axis=1)
-    qkv = ag_mm(x_loc, wqkv, AXIS, tile_size=s_loc,
-                valid_sizes=valid_sizes)  # AllGather ⊗ GEMM1
+    qkv = ag_mm(x_loc, wqkv, AXIS, tile_size=s_loc, valid_sizes=valid_sizes,
+                gemm=compute.qkv_gemm if compute else None)  # AllGather ⊗ GEMM1
     q, k, v = jnp.split(qkv, 3, axis=-1)
     shape = (*q.shape[:2], h_loc, hd)
     k, v = k.reshape(shape), v.reshape(shape)
-    attn = _attention(q.reshape(shape), k, v, mask=attn_mask)
+    if compute is not None:
+        attn = compute.attention(q.reshape(shape), k, v)
+    else:
+        attn = _attention(q.reshape(shape), k, v, mask=attn_mask)
     attn = attn.reshape(*q.shape[:2], h_loc * hd)
     g_loc = mm_rs(attn, p["wo"].reshape(-1, d_model), AXIS, tile_size=s_loc,
-                  valid_sizes=valid_sizes)  # GEMM ⊗ ReduceScatter
+                  valid_sizes=valid_sizes,
+                  gemm=compute.wo_gemm if compute else None)  # GEMM ⊗ ReduceScatter
 
     # ---- connective block (SP over local sequence shard) ----
-    y_loc = _ln(x_loc + g_loc, p["ln1_s"], p["ln1_b"])
+    if compute is not None:
+        y_loc = compute.connective(g_loc, x_loc, p["ln1_s"], p["ln1_b"])
+    else:
+        y_loc = _ln(x_loc + g_loc, p["ln1_s"], p["ln1_b"])
 
     # ---- MLP block (TP over columns) ----
-    h = ag_mm(y_loc, p["w1"], AXIS, tile_size=s_loc, valid_sizes=valid_sizes)
+    h = ag_mm(y_loc, p["w1"], AXIS, tile_size=s_loc, valid_sizes=valid_sizes,
+              gemm=compute.w1_gemm if compute else None)
     h = jax.nn.gelu(h)
-    f_loc = mm_rs(h, p["w2"], AXIS, tile_size=s_loc, valid_sizes=valid_sizes)
+    f_loc = mm_rs(h, p["w2"], AXIS, tile_size=s_loc, valid_sizes=valid_sizes,
+                  gemm=compute.w2_gemm if compute else None)
 
     # ---- connective block ----
-    out = _ln(y_loc + f_loc, p["ln2_s"], p["ln2_b"])
+    if compute is not None:
+        out = compute.connective(f_loc, y_loc, p["ln2_s"], p["ln2_b"])
+    else:
+        out = _ln(y_loc + f_loc, p["ln2_s"], p["ln2_b"])
     if return_kv:
         return out, k, v
     return out
@@ -249,11 +347,14 @@ def hmp_layer(p: Dict, x, mesh: Mesh, *, overlap: bool = False,
     (``plan.seq_layout(seq).scatter(x)``); dense layouts take ``x`` as-is.
     """
     p, layout = _validate_plan(p, x, mesh, plan, seq=seq)
+    backend = plan.compute_backend if plan is not None else "xla"
     fn = shard_map(
-        functools.partial(_hmp_layer_local, overlap=overlap, layout=layout),
+        functools.partial(_hmp_layer_local, overlap=overlap, layout=layout,
+                          plan=plan, backend=backend),
         mesh=mesh,
         in_specs=(layer_param_specs(), P(None, AXIS, None)),
         out_specs=P(None, AXIS, None),
+        check_rep=backend == "xla",  # pallas_call has no replication rule
     )
     return fn(p, x)
 
@@ -280,9 +381,11 @@ def make_kv_cache(batch: int, cache_len: int, num_layers: int, mesh: Mesh,
 
 
 def _prefill_layer_local(p, x_loc, ck, cv, *, overlap: bool,
-                         layout: Optional[SeqLayout] = None):
+                         layout: Optional[SeqLayout] = None,
+                         plan: Optional[ExecPlan] = None,
+                         backend: str = "xla"):
     y_loc, k, v = _hmp_layer_local(p, x_loc, overlap=overlap, return_kv=True,
-                                   layout=layout)
+                                   layout=layout, plan=plan, backend=backend)
     if layout is not None:
         # ragged layout: cache rows are *absolute* positions — gather the
         # valid rows out of the padded order before writing, so decode's
@@ -308,11 +411,14 @@ def hmp_prefill(layers: Sequence[Dict], x, mesh: Mesh, cache: List[Dict],
     validated = [_validate_plan(p, x, mesh, plan, seq=seq) for p in layers]
     layers = [p for p, _ in validated]
     layout = validated[0][1] if validated else None
+    backend = plan.compute_backend
     fn = shard_map(
-        functools.partial(_prefill_layer_local, overlap=overlap, layout=layout),
+        functools.partial(_prefill_layer_local, overlap=overlap, layout=layout,
+                          plan=plan, backend=backend),
         mesh=mesh,
         in_specs=(layer_param_specs(), P(None, AXIS, None), CACHE_SPEC, CACHE_SPEC),
         out_specs=(P(None, AXIS, None), CACHE_SPEC, CACHE_SPEC),
+        check_rep=backend == "xla",
     )
     new_cache = []
     for p, c in zip(layers, cache):
@@ -321,30 +427,59 @@ def hmp_prefill(layers: Sequence[Dict], x, mesh: Mesh, cache: List[Dict],
     return x, new_cache
 
 
-def _decode_mlp_tail(p, x, g):
+def _decode_mlp_tail(p, x, g, compute: Optional[_PallasCompute] = None):
     """Shared tail of the single-token TP step: attention output -> residual
-    LN -> TP MLP (psum exit) -> residual LN."""
+    LN -> TP MLP (psum exit) -> residual LN.  ``compute`` routes the MLP
+    GEMMs through the valid-length kernels (pad column blocks skipped)."""
     x = _ln(x + g, p["ln1_s"], p["ln1_b"])
-    h = jax.nn.gelu(jnp.einsum("bsd,df->bsf", x, p["w1"]))
-    f = jax.lax.psum(jnp.einsum("bsf,fd->bsd", h, p["w2"]), AXIS)
+    if compute is not None:
+        h = jax.nn.gelu(compute.w1_gemm(x, p["w1"]))
+        f = jax.lax.psum(compute.w2_gemm(h, p["w2"]), AXIS)
+    else:
+        h = jax.nn.gelu(jnp.einsum("bsd,df->bsf", x, p["w1"]))
+        f = jax.lax.psum(jnp.einsum("bsf,fd->bsd", h, p["w2"]), AXIS)
     return _ln(x + f, p["ln2_s"], p["ln2_b"])
 
 
-def _decode_layer_local(p, x, ck, cv, index):
+def _decode_qkv(p, x, compute: Optional[_PallasCompute]):
+    """(B, S, d) -> q, k, v (B, S, h_loc, hd) through the backend (the
+    fused-QKV projection shared by decode and the megatron baseline)."""
+    h_loc, hd = p["wq"].shape[1], p["wq"].shape[2]
+    if compute is None:
+        q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+        k_new = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+        v_new = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+        return q, k_new, v_new
+    d_model = x.shape[-1]
+    wqkv = jnp.concatenate(
+        [p["wq"].reshape(d_model, -1), p["wk"].reshape(d_model, -1),
+         p["wv"].reshape(d_model, -1)], axis=1)
+    qkv = compute.qkv_gemm(x, wqkv)
+    q, k_new, v_new = jnp.split(qkv, 3, axis=-1)
+    shape = (*x.shape[:2], h_loc, hd)
+    return q.reshape(shape), k_new.reshape(shape), v_new.reshape(shape)
+
+
+def _decode_layer_local(p, x, ck, cv, index, *,
+                        plan: Optional[ExecPlan] = None,
+                        backend: str = "xla"):
     """Single-token TP step on one device.  x: (B, 1, d) replicated; the SP
     axis is degenerate at one token, so connective blocks run redundantly and
     each TP block exits through an AllReduce (psum) instead of the ring.
     Writes this step's K/V into the local cache shard *before* attending, so
     position ``index`` is always valid.  index: (B,) per-slot positions —
-    slots in a wave may sit at different depths (mixed-length prompts)."""
+    slots in a wave may sit at different depths (mixed-length prompts).
+
+    With the pallas backend the projections shed pad head/column blocks;
+    the attention core itself stays XLA (a cache gather + softmax, not an
+    MXU-bound GEMM — pad head slots are zero in cache and query alike)."""
     d_model = x.shape[-1]
     b = x.shape[0]
     h_loc, hd = p["wq"].shape[1], p["wq"].shape[2]
     cache_len = ck.shape[1]
+    compute = _make_compute(backend, plan, None, None)
 
-    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
-    k_new = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
-    v_new = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    q, k_new, v_new = _decode_qkv(p, x, compute)
     rows = jnp.arange(b)
     ck = ck.at[rows, index].set(k_new[:, 0])
     cv = cv.at[rows, index].set(v_new[:, 0])
@@ -354,8 +489,11 @@ def _decode_layer_local(p, x, ck, cv, index):
     scores = jnp.where(valid[:, None, None, :], scores, -1e30)
     probs = jax.nn.softmax(scores, axis=-1).astype(cv.dtype)
     attn = jnp.einsum("bhqt,bthd->bqhd", probs, cv).reshape(*x.shape[:2], h_loc * hd)
-    g = jax.lax.psum(attn @ p["wo"].reshape(-1, d_model), AXIS)
-    return _decode_mlp_tail(p, x, g), ck, cv
+    if compute is not None:
+        g = jax.lax.psum(compute.wo_gemm(attn, p["wo"].reshape(-1, d_model)), AXIS)
+    else:
+        g = jax.lax.psum(attn @ p["wo"].reshape(-1, d_model), AXIS)
+    return _decode_mlp_tail(p, x, g, compute), ck, cv
 
 
 def hmp_decode(layers: Sequence[Dict], x, mesh: Mesh, cache: List[Dict],
@@ -367,11 +505,13 @@ def hmp_decode(layers: Sequence[Dict], x, mesh: Mesh, cache: List[Dict],
     waves).  Returns (y, cache) with y replicated.
     """
     layers = [_validate_plan(p, None, mesh, plan)[0] for p in layers]
+    backend = plan.compute_backend
     fn = shard_map(
-        _decode_layer_local,
+        functools.partial(_decode_layer_local, plan=plan, backend=backend),
         mesh=mesh,
         in_specs=(layer_param_specs(), P(), CACHE_SPEC, CACHE_SPEC, P()),
         out_specs=(P(), CACHE_SPEC, CACHE_SPEC),
+        check_rep=backend == "xla",
     )
     index = jnp.asarray(index, jnp.int32)
     if index.ndim == 0:
@@ -412,13 +552,15 @@ def make_paged_kv_cache(num_pages: int, page_size: int, num_layers: int,
 
 
 def _prefill_paged_layer_local(p, x_loc, pk, pv, phys, within, *, overlap,
-                               layout: Optional[SeqLayout] = None):
+                               layout: Optional[SeqLayout] = None,
+                               plan: Optional[ExecPlan] = None,
+                               backend: str = "xla"):
     """Prefill one layer and scatter its K/V head shards straight into pool
     pages.  phys/within: (S,) physical page and in-page slot per *absolute*
     position; under a ragged layout the valid rows are gathered out of the
     padded order first, so pad rows never touch the pool."""
     y_loc, k, v = _hmp_layer_local(p, x_loc, overlap=overlap, return_kv=True,
-                                   layout=layout)
+                                   layout=layout, plan=plan, backend=backend)
     if layout is not None:
         k, v = k[:, layout.rows], v[:, layout.rows]
     pk = pk.at[phys, within].set(k[0])
@@ -453,13 +595,15 @@ def hmp_prefill_paged(layers: Sequence[Dict], x, mesh: Mesh,
     pos = jnp.arange(s)
     phys = block_row[pos // page_size].astype(jnp.int32)
     within = (pos % page_size).astype(jnp.int32)
+    backend = plan.compute_backend
     fn = shard_map(
         functools.partial(_prefill_paged_layer_local, overlap=overlap,
-                          layout=layout),
+                          layout=layout, plan=plan, backend=backend),
         mesh=mesh,
         in_specs=(layer_param_specs(), P(None, AXIS, None),
                   PAGED_CACHE_SPEC, PAGED_CACHE_SPEC, P(), P()),
         out_specs=(P(None, AXIS, None), PAGED_CACHE_SPEC, PAGED_CACHE_SPEC),
+        check_rep=backend == "xla",
     )
     new_pages = []
     for p, c in zip(layers, pages):
@@ -468,7 +612,9 @@ def hmp_prefill_paged(layers: Sequence[Dict], x, mesh: Mesh,
     return x, new_pages
 
 
-def _decode_paged_layer_local(p, x, pk, pv, block_table, positions):
+def _decode_paged_layer_local(p, x, pk, pv, block_table, positions, *,
+                              plan: Optional[ExecPlan] = None,
+                              backend: str = "xla"):
     """Paged single-token TP step on one device.  x: (S, 1, d) replicated
     slot batch; block_table: (S, W) physical page per (slot, logical page);
     positions: (S,) absolute position each slot writes this step.
@@ -476,15 +622,16 @@ def _decode_paged_layer_local(p, x, pk, pv, block_table, positions):
     Scatters the new K/V entry into its page, then gathers each slot's pages
     into a (S, W*page_size, h_loc, hd) view via the block table and attends
     under the per-slot length mask.  Idle slots carry all-null block rows:
-    their write lands in the null page and every null read is masked."""
+    their write lands in the null page and every null read is masked.
+    Backend routing mirrors ``_decode_layer_local``: projections shed pad
+    blocks, the gather-attention core stays XLA."""
     d_model = x.shape[-1]
     h_loc, hd = p["wq"].shape[1], p["wq"].shape[2]
     page_size = pk.shape[1]
     w = block_table.shape[1]
+    compute = _make_compute(backend, plan, None, None)
 
-    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
-    k_new = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
-    v_new = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    q, k_new, v_new = _decode_qkv(p, x, compute)
 
     rows = jnp.arange(x.shape[0])
     phys = block_table[rows, positions // page_size]
@@ -501,8 +648,11 @@ def _decode_paged_layer_local(p, x, pk, pv, block_table, positions):
     scores = jnp.where(valid[:, None, None, :], scores, -1e30)
     probs = jax.nn.softmax(scores, axis=-1).astype(vs.dtype)
     attn = jnp.einsum("bhqt,bthd->bqhd", probs, vs).reshape(*x.shape[:2], h_loc * hd)
-    g = jax.lax.psum(attn @ p["wo"].reshape(-1, d_model), AXIS)
-    return _decode_mlp_tail(p, x, g), pk, pv
+    if compute is not None:
+        g = jax.lax.psum(compute.wo_gemm(attn, p["wo"].reshape(-1, d_model)), AXIS)
+    else:
+        g = jax.lax.psum(attn @ p["wo"].reshape(-1, d_model), AXIS)
+    return _decode_mlp_tail(p, x, g, compute), pk, pv
 
 
 def hmp_decode_paged(layers: Sequence[Dict], x, mesh: Mesh,
@@ -515,12 +665,14 @@ def hmp_decode_paged(layers: Sequence[Dict], x, mesh: Mesh,
     (y, pages) with y replicated.
     """
     layers = [_validate_plan(p, None, mesh, plan)[0] for p in layers]
+    backend = plan.compute_backend
     fn = shard_map(
-        _decode_paged_layer_local,
+        functools.partial(_decode_paged_layer_local, plan=plan, backend=backend),
         mesh=mesh,
         in_specs=(layer_param_specs(), P(), PAGED_CACHE_SPEC, PAGED_CACHE_SPEC,
                   P(), P()),
         out_specs=(P(), PAGED_CACHE_SPEC, PAGED_CACHE_SPEC),
+        check_rep=backend == "xla",
     )
     block_table = jnp.asarray(block_table, jnp.int32)
     positions = jnp.asarray(positions, jnp.int32)
@@ -533,19 +685,31 @@ def hmp_decode_paged(layers: Sequence[Dict], x, mesh: Mesh,
 
 # --- Megatron-LM TP baseline -----------------------------------------------
 
-def _megatron_layer_local(p, x):
+def _megatron_layer_local(p, x, *, plan: Optional[ExecPlan] = None,
+                          backend: str = "xla"):
     """x replicated; AllReduce after each block; connective computed
-    redundantly on every device (the waste HMP eliminates)."""
+    redundantly on every device (the waste HMP eliminates).  The pallas
+    backend sheds pad head/column blocks here too (x is the full dense
+    sequence, so only the unit axes are ragged)."""
     h_loc, hd = p["wq"].shape[1], p["wq"].shape[2]
-    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
-    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
-    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
-    attn = _attention(q, k, v)
-    g = jnp.einsum("bshk,hkd->bsd", attn, p["wo"])
+    d_model = x.shape[-1]
+    compute = _make_compute(backend, plan, None, x.shape[1])
+    q, k, v = _decode_qkv(p, x, compute)
+    if compute is not None:
+        attn = compute.attention(q, k, v)
+        g = compute.wo_gemm(attn.reshape(*x.shape[:2], h_loc * hd),
+                            p["wo"].reshape(-1, d_model))
+    else:
+        attn = _attention(q, k, v)
+        g = jnp.einsum("bshk,hkd->bsd", attn, p["wo"])
     g = jax.lax.psum(g, AXIS)  # AllReduce #1
     x = _ln(x + g, p["ln1_s"], p["ln1_b"])  # redundant on all devices
-    h = jax.nn.gelu(jnp.einsum("bsd,df->bsf", x, p["w1"]))
-    f = jnp.einsum("bsf,fd->bsd", h, p["w2"])
+    if compute is not None:
+        h = jax.nn.gelu(compute.w1_gemm(x, p["w1"]))
+        f = compute.w2_gemm(h, p["w2"])
+    else:
+        h = jax.nn.gelu(jnp.einsum("bsd,df->bsf", x, p["w1"]))
+        f = jnp.einsum("bsf,fd->bsd", h, p["w2"])
     f = jax.lax.psum(f, AXIS)  # AllReduce #2
     x = _ln(x + f, p["ln2_s"], p["ln2_b"])
     return x
@@ -553,11 +717,13 @@ def _megatron_layer_local(p, x):
 
 def megatron_layer(p: Dict, x, mesh: Mesh, *, plan: Optional[ExecPlan] = None):
     p, _ = _validate_plan(p, None, mesh, plan)
+    backend = plan.compute_backend if plan is not None else "xla"
     fn = shard_map(
-        _megatron_layer_local,
+        functools.partial(_megatron_layer_local, plan=plan, backend=backend),
         mesh=mesh,
         in_specs=(layer_param_specs(), P()),
         out_specs=P(),
+        check_rep=backend == "xla",
     )
     return fn(p, x)
 

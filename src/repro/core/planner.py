@@ -133,6 +133,76 @@ def memory_aware_balancing(
     return memory_aware_balancing(units, unit_mem, v, budgets, other_mem, next_active)
 
 
+def regularize_pad_spread(
+    units: np.ndarray,
+    capacities: Sequence[float],
+    penalty: float,
+) -> np.ndarray:
+    """Trade straggler latency against pad spread (the ``max(units)`` term).
+
+    SPMD materialization pads every device's shard to ``max(units)``
+    (``execplan.ExecPlan``): a capacity-proportional split on a strongly
+    skewed cluster therefore buys its balance with pad waste — up to
+    ``1 - mean/max`` of executed dense work under the "xla" backend, and
+    still block-rounding residue plus padded-tile transport under the
+    shedding "pallas" backend.  This post-pass sweeps every candidate
+    ``max(units)`` ceiling from the equal split up to the proportional
+    split's straggler, waterfilling units proportional to capacity under
+    the ceiling, and keeps the assignment minimizing
+
+        cost = max_d(units_d / V_d) / t_balanced  +  penalty * pad_waste
+
+    where ``t_balanced = total / sum(V)`` normalizes the straggler term
+    scale-free and ``pad_waste = D * max(units) / total - 1`` is exactly
+    the axis' ``padding_waste``.  ``penalty=0`` returns the input
+    unchanged (the paper's pure Eq. 4/5 objective); a large penalty
+    converges to the equal split (zero padding, megatron-style balance).
+    The ceiling sweep is exhaustive over the one scalar that matters
+    (``max(units)``), so it cannot strand in the local minima a greedy
+    unit-move search hits on skewed capacity vectors.
+    """
+    units = np.asarray(units).copy().astype(int)
+    v = np.asarray(capacities, dtype=float)
+    n = len(units)
+    total = int(units.sum())
+    if penalty <= 0 or n <= 1 or total == 0:
+        return units
+    t_balanced = total / v.sum()
+
+    def cost(u: np.ndarray) -> float:
+        waste = n * u.max() / total - 1.0
+        return float(np.max(u / v)) / t_balanced + penalty * waste
+
+    def capped(cap: int) -> Optional[np.ndarray]:
+        """Capacity-proportional waterfill with every device <= cap."""
+        if cap * n < total:
+            return None
+        out = np.zeros(n, int)
+        active = list(range(n))
+        rem = total
+        while True:
+            assign = balanced_partition(rem, v[active])
+            over = [i for i, a in zip(active, assign) if a > cap]
+            if not over:
+                for i, a in zip(active, assign):
+                    out[i] = a
+                return out
+            for i in over:
+                out[i] = cap
+                rem -= cap
+            active = [i for i in active if i not in over]
+
+    best, best_cost = units, cost(units)
+    for cap in range(-(-total // n), int(units.max()) + 1):
+        cand = capped(cap)
+        if cand is None:
+            continue
+        c = cost(cand)
+        if c < best_cost - 1e-12:
+            best, best_cost = cand, c
+    return best
+
+
 def sequence_partition(
     seq_units: int,
     capacities: Sequence[float],
@@ -228,6 +298,7 @@ def plan(
     seq_units: int = 0,
     unit_bytes: float = 1.0,
     unit_con_time: Optional[Sequence[float]] = None,
+    pad_penalty: float = 0.0,
 ) -> Plan:
     """Full Algorithm 1 (+ the ragged-SP extension when ``links`` is given).
 
@@ -235,6 +306,13 @@ def plan(
     per-device links, ``sequence_partition`` solves uneven sequence tiles
     over ``seq_units`` rows (the planning sequence length) and ``Plan.seq``
     carries the resulting fractions.
+
+    ``pad_penalty`` co-optimizes balance against residual pad waste: the
+    balanced head/column partitions are post-passed by
+    :func:`regularize_pad_spread` before memory-aware balancing, trading a
+    little straggler latency for a smaller ``max(units)`` spread (what the
+    SPMD executor pads — and even the shedding pallas backend still ships —
+    on every device).
     """
     v = [d.capacity for d in devices]
     budgets = [d.memory_budget for d in devices]
@@ -242,6 +320,9 @@ def plan(
 
     a = balanced_partition(model.num_heads, v)        # line 7
     b = balanced_partition(model.mlp_columns, v)      # line 8
+    if pad_penalty > 0:
+        a = regularize_pad_spread(a, v, pad_penalty)
+        b = regularize_pad_spread(b, v, pad_penalty)
     if links is None:
         seq = np.full(n, 1.0 / n)                     # §III-C-2: equal SP split
     else:
@@ -263,6 +344,15 @@ def plan(
     a2 = memory_aware_balancing(a, att_unit, v, budgets, other_mem=b2 * mlp_unit)
     if a2 is None:
         return Plan(a, b2, seq, False, "MHA rebalancing infeasible")
+
+    if pad_penalty > 0:
+        # memory balancing can re-raise max(units) (it shifts overflow onto
+        # devices with headroom, cap-free); re-regularize and keep the
+        # result only if it still fits every budget
+        a3 = regularize_pad_spread(a2, v, pad_penalty)
+        b3 = regularize_pad_spread(b2, v, pad_penalty)
+        if not np.any(a3 * att_unit + b3 * mlp_unit > np.asarray(budgets)):
+            a2, b2 = a3, b3
 
     # lines 23-24: final feasibility check
     total = a2 * att_unit + b2 * mlp_unit

@@ -74,17 +74,20 @@ class AnalyticProfiler:
             ],
         }
 
-    def plan(self, devices: Sequence[DeviceSpec], links=None):
+    def plan(self, devices: Sequence[DeviceSpec], links=None,
+             pad_penalty: float = 0.0):
         """Run Algorithm 1 from this profile; with per-device ``links``
         (``costmodel.LinkSpec``) the SP axis is solved bandwidth-aware over
-        this profiler's sequence length (ragged sequence tiles)."""
+        this profiler's sequence length (ragged sequence tiles).
+        ``pad_penalty`` forwards to ``planner.plan`` — regularize the unit
+        partitions against ``max(units)`` pad spread."""
         from repro.core import planner
 
         kwargs = {}
         if links is not None:
             kwargs = dict(seq_units=self.seq, **self.seq_cost_args(devices))
         return planner.plan(self.model_profile(), self.device_profiles(devices),
-                            links, **kwargs)
+                            links, pad_penalty=pad_penalty, **kwargs)
 
 
 class HostProfiler:

@@ -35,16 +35,29 @@ The global padded layout (which padded row holds which real position) is
 owned by ``execplan.SeqLayout``; this module only needs the per-device
 valid counts.
 
+Pluggable per-tile compute (``ExecPlan.compute_backend``): each primitive
+takes an optional ``gemm(tile, w, valid_rows)`` callback.  Without one the
+per-step GEMM is the masked einsum above (pad rows zeroed, then a dense
+dot — the "xla" oracle).  With one — the "pallas" path binds
+``kernels.ops.gemm`` with this device's valid column/contraction counts —
+the valid-length kernel owns the row masking itself (its epilogue zeroes
+pad rows exactly), so the pre-mask is skipped and pad *blocks* are never
+computed at all.
+
 All four functions are bitwise-consistent with each other up to
 floating-point summation order (the ring fixes a deterministic order).
 """
 from __future__ import annotations
 
-from typing import Optional, Sequence
+from typing import Callable, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+# per-tile GEMM hook: (x_tile (B,S,d), w (d,F), valid_rows scalar | None)
+# -> (B,S,F) with pad rows (rows >= valid_rows) exactly zero
+TileGemm = Callable[..., jnp.ndarray]
 
 
 def _perm(axis_size: int, shift: int = 1):
@@ -84,7 +97,8 @@ def _axis_size(axis_name: str) -> int:
 
 def ring_allgather_matmul(x_local, w_local, axis_name: str,
                           *, tile_size: Optional[int] = None,
-                          valid_sizes: Optional[Sequence[int]] = None):
+                          valid_sizes: Optional[Sequence[int]] = None,
+                          gemm: Optional[TileGemm] = None):
     """Overlapped computation of ``all_gather(x, seq) @ w_local``.
 
     x_local: (B, S_loc, d)   — this device's sequence tile (paper's H_i)
@@ -117,12 +131,17 @@ def ring_allgather_matmul(x_local, w_local, axis_name: str,
     tile = x_local
     for r in range(d):
         src = jnp.mod(idx - r, d)  # owner of the tile we hold at step r
-        if vs is not None:
-            row_ok = jnp.arange(tile_size) < jnp.asarray(vs)[src]
-            gemm_in = jnp.where(row_ok[None, :, None], tile, 0)
+        if gemm is not None:
+            # valid-length kernel: masks pad rows itself and skips pad blocks
+            vrows = None if vs is None else jnp.asarray(vs)[src]
+            part = gemm(tile, w_local, vrows)
         else:
-            gemm_in = tile
-        part = jnp.einsum("bsd,df->bsf", gemm_in, w_local)
+            if vs is not None:
+                row_ok = jnp.arange(tile_size) < jnp.asarray(vs)[src]
+                gemm_in = jnp.where(row_ok[None, :, None], tile, 0)
+            else:
+                gemm_in = tile
+            part = jnp.einsum("bsd,df->bsf", gemm_in, w_local)
         out = jax.lax.dynamic_update_slice(out, part, (0, src * tile_size, 0))
         if r != d - 1:
             # send current tile forward; receive the next from the ring
@@ -132,7 +151,8 @@ def ring_allgather_matmul(x_local, w_local, axis_name: str,
 
 def matmul_ring_reducescatter(h_local, w_local, axis_name: str,
                               *, tile_size: Optional[int] = None,
-                              valid_sizes: Optional[Sequence[int]] = None):
+                              valid_sizes: Optional[Sequence[int]] = None,
+                              gemm: Optional[TileGemm] = None):
     """Overlapped computation of ``psum_scatter(h_local @ w_local, seq)``.
 
     h_local: (B, S, F_loc)   — full sequence, this device's column shard (E_i)
@@ -174,10 +194,13 @@ def matmul_ring_reducescatter(h_local, w_local, axis_name: str,
         tile = jax.lax.dynamic_slice(
             h_local, (0, t * tile_size, 0), (b, tile_size, h_local.shape[2])
         )
-        if vs is not None:
-            row_ok = jnp.arange(tile_size) < jnp.asarray(vs)[t]
-            tile = jnp.where(row_ok[None, :, None], tile, 0)
-        part = jnp.einsum("bsf,fd->bsd", tile, w_local)
+        if gemm is not None:
+            part = gemm(tile, w_local, None if vs is None else jnp.asarray(vs)[t])
+        else:
+            if vs is not None:
+                row_ok = jnp.arange(tile_size) < jnp.asarray(vs)[t]
+                tile = jnp.where(row_ok[None, :, None], tile, 0)
+            part = jnp.einsum("bsf,fd->bsd", tile, w_local)
         if acc is None:
             acc = part
         else:
@@ -194,7 +217,8 @@ def _global_valid_mask(vs: np.ndarray, tile_size: int) -> np.ndarray:
 
 def sync_allgather_matmul(x_local, w_local, axis_name: str,
                           *, tile_size: Optional[int] = None,
-                          valid_sizes: Optional[Sequence[int]] = None):
+                          valid_sizes: Optional[Sequence[int]] = None,
+                          gemm: Optional[TileGemm] = None):
     if tile_size is not None and tile_size != x_local.shape[1]:
         raise ValueError(
             f"local sequence tile is {x_local.shape[1]} rows but "
@@ -204,14 +228,20 @@ def sync_allgather_matmul(x_local, w_local, axis_name: str,
     vs = _check_valid_sizes(valid_sizes, d, x_local.shape[1])
     xg = jax.lax.all_gather(x_local, axis_name, axis=1, tiled=True)
     if vs is not None:
+        # the gathered sequence mixes per-tile valid counts, which the
+        # prefix-valid kernel cannot express: mask rows here either way
+        # (a shedding gemm still skips pad column/contraction blocks)
         mask = _global_valid_mask(vs, x_local.shape[1])
         xg = jnp.where(jnp.asarray(mask)[None, :, None], xg, 0)
+    if gemm is not None:
+        return gemm(xg, w_local, None)
     return jnp.einsum("bsd,df->bsf", xg, w_local)
 
 
 def sync_matmul_reducescatter(h_local, w_local, axis_name: str,
                               *, tile_size: Optional[int] = None,
-                              valid_sizes: Optional[Sequence[int]] = None):
+                              valid_sizes: Optional[Sequence[int]] = None,
+                              gemm: Optional[TileGemm] = None):
     d = _axis_size(axis_name)
     s = h_local.shape[1]
     if (tile_size is None and s % d) or (
@@ -224,5 +254,8 @@ def sync_matmul_reducescatter(h_local, w_local, axis_name: str,
     if vs is not None:
         mask = _global_valid_mask(vs, s // d)
         h_local = jnp.where(jnp.asarray(mask)[None, :, None], h_local, 0)
-    out = jnp.einsum("bsf,fd->bsd", h_local, w_local)
+    if gemm is not None:
+        out = gemm(h_local, w_local, None)
+    else:
+        out = jnp.einsum("bsf,fd->bsd", h_local, w_local)
     return jax.lax.psum_scatter(out, axis_name, scatter_dimension=1, tiled=True)

@@ -211,12 +211,17 @@ def simulate_execplan(
     """Score the exact plan the executor runs (``core/execplan.ExecPlan``).
 
     ``padded=False`` scores the planner's assigned workload (paper Eq. 4/5);
-    ``padded=True`` scores the SPMD pad-and-mask execution, where every
-    device runs ``max(units)`` dense units and ships the straggler's
-    ``max(fraction)`` sequence tile — the price of expressing uneven shards
-    as equal-shaped shards.  Comparing the two quantifies the padding
-    overhead of a given plan; ``benchmarks/microbench.py`` reports both next
-    to the measured wall time of the same plan.
+    ``padded=True`` scores the SPMD execution view, which depends on the
+    plan's ``compute_backend``: under "xla" every device runs
+    ``max(units)`` dense units and ships the straggler's ``max(fraction)``
+    sequence tile — the price of expressing uneven shards as equal-shaped
+    shards; under "pallas" the valid-length kernels shed pad compute, so
+    the compute axes score *effective* units (``padded=True`` then differs
+    from ``padded=False`` only in the padded-tile transport/connective
+    terms — block-rounding residue is ignored).  Comparing the views
+    quantifies the padding overhead of a given plan;
+    ``benchmarks/microbench.py`` reports them next to the measured wall
+    time of the same plan (``execplan_padshed`` for the backend split).
     """
     if eplan.num_devices != len(devices):
         raise ValueError(

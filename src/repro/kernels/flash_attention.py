@@ -10,6 +10,15 @@ which is the standard online-softmax accumulation pattern.
 Supports causal and sliding-window masks (RecurrentGemma local attention,
 and the long_500k sliding-window variant) and GQA via the kv-head index
 map (q head h reads kv head h // group).
+
+:func:`ragged_flash_attention` is the ``compute_backend="pallas"`` variant
+for the HMP hot loop: queries/keys live in an ``execplan.SeqLayout`` padded
+ragged order (position per padded row, -1 for pad rows), a static
+block-level skip map derived from those positions prunes (q-block, k-block)
+pairs that are entirely pad or entirely acausal, and a per-device
+``valid_heads`` scalar-prefetch operand skips padded head slots outright —
+so executed attention FLOPs track the plan's assigned heads, not
+``max(heads)``.
 """
 from __future__ import annotations
 
@@ -17,8 +26,11 @@ import functools
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.tiled_gemm import divisor_block
 
 NEG_INF = -1e30
 
@@ -83,7 +95,11 @@ def flash_attention(
     g = h // hkv
     block_q = min(block_q, sq)
     block_k = min(block_k, sk)
-    assert sq % block_q == 0 and sk % block_k == 0
+    if sq % block_q or sk % block_k:
+        raise ValueError(
+            f"attention ({sq} q x {sk} k) does not tile into blocks "
+            f"(block_q={block_q}, block_k={block_k}); blocks must divide"
+        )
     scale = 1.0 / (hd ** 0.5)
 
     grid = (b, h, sq // block_q, sk // block_k)
@@ -108,3 +124,142 @@ def flash_attention(
         ],
         interpret=interpret,
     )(q, k, v)
+
+
+# --- ragged (SeqLayout-aware) variant ----------------------------------------
+
+def attention_block_map(positions, block_q: int, block_k: int) -> np.ndarray:
+    """Static (nq, nk) skip map of a ragged causal attention.
+
+    ``positions[r]`` is the real position padded row ``r`` holds (-1 for pad
+    rows).  A (q-block, k-block) pair is live iff some valid key in the
+    k-block is causally visible to some valid query in the q-block; for a
+    dense ``arange`` layout this reduces to the standard causal block skip.
+    The layout is trace-time static (it comes from ``ExecPlan.seq_layout``),
+    so the map is plain numpy and enters the kernel as a scalar-prefetch
+    operand.
+    """
+    pos = np.asarray(positions, int)
+    (s,) = pos.shape
+    if s % block_q or s % block_k:
+        raise ValueError(
+            f"positions ({s} rows) do not tile into blocks "
+            f"(block_q={block_q}, block_k={block_k})"
+        )
+    nq, nk = s // block_q, s // block_k
+    live = np.zeros((nq, nk), np.int32)
+    for qi in range(nq):
+        qp = pos[qi * block_q:(qi + 1) * block_q]
+        qp = qp[qp >= 0]
+        if not qp.size:
+            continue
+        for ki in range(nk):
+            kp = pos[ki * block_k:(ki + 1) * block_k]
+            kp = kp[kp >= 0]
+            if kp.size and kp.min() <= qp.max():
+                live[qi, ki] = 1
+    return live
+
+
+def _ragged_kernel(vh_ref, bm_ref, q_ref, k_ref, v_ref, pq_ref, pk_ref, o_ref,
+                   m_scr, l_scr, acc_scr, *, scale: float):
+    hi = pl.program_id(1)
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    # skip pad head slots (per-device scalar) and pruned block pairs
+    live = (hi < vh_ref[0]) & (bm_ref[qi, ki] > 0)
+
+    @pl.when(live)
+    def _step():
+        q = q_ref[0, 0].astype(jnp.float32)   # (block_q, hd)
+        kk = k_ref[0, 0].astype(jnp.float32)  # (block_k, hd)
+        vv = v_ref[0, 0].astype(jnp.float32)
+
+        s = jnp.dot(q, kk.T, preferred_element_type=jnp.float32) * scale
+        pq = pq_ref[...]
+        pk = pk_ref[...]
+        mask = (pq[:, None] >= 0) & (pk[None, :] >= 0) \
+            & (pk[None, :] <= pq[:, None])
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_scr[...]
+        l_prev = l_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        # fully-masked rows keep the accumulator stable (exp guard)
+        p = jnp.where(s > NEG_INF / 2, jnp.exp(s - m_new[:, None]), 0.0)
+        alpha = jnp.where(m_prev > NEG_INF / 2, jnp.exp(m_prev - m_new), 0.0)
+        l_scr[...] = alpha * l_prev + jnp.sum(p, axis=1)
+        acc_scr[...] = acc_scr[...] * alpha[:, None] + jnp.dot(
+            p, vv, preferred_element_type=jnp.float32
+        )
+        m_scr[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _finish():
+        # rows with no live contribution (pad queries, pad heads) emit zero
+        denom = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0, 0] = (acc_scr[...] / denom[:, None]).astype(o_ref.dtype)
+
+
+def ragged_flash_attention(
+    q, k, v, *, positions, valid_heads=None,
+    block_q: int = 128, block_k: int = 128, interpret: bool = False,
+):
+    """Causal flash attention over a padded ragged row order.
+
+    q: (B,H,S,hd); k,v: (B,Hkv,S,hd); positions: (S,) static int row->real
+    position (-1 = pad row).  ``valid_heads`` (traced scalar ok) marks the
+    leading real head slots of this device's padded shard — padded heads
+    and pruned (q, k) block pairs are skipped entirely, pad query rows come
+    out exactly zero, and valid rows match ``flash_attention_ref`` over the
+    compacted sequence.
+    """
+    b, h, s, hd = q.shape
+    hkv = k.shape[1]
+    g = h // hkv
+    block_q = divisor_block(s, block_q)
+    block_k = divisor_block(s, block_k)
+    scale = 1.0 / (hd ** 0.5)
+
+    block_map = attention_block_map(positions, block_q, block_k)
+    vh = jnp.asarray(h if valid_heads is None else valid_heads,
+                     jnp.int32).reshape(1)
+    pos = jnp.asarray(positions, jnp.int32)
+
+    grid = (b, h, s // block_q, s // block_k)
+    kernel = functools.partial(_ragged_kernel, scale=scale)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,  # valid_heads, block skip map
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, hd),
+                         lambda bi, hi, qi, ki, vh, bm: (bi, hi, qi, 0)),
+            pl.BlockSpec((1, 1, block_k, hd),
+                         lambda bi, hi, qi, ki, vh, bm: (bi, hi // g, ki, 0)),
+            pl.BlockSpec((1, 1, block_k, hd),
+                         lambda bi, hi, qi, ki, vh, bm: (bi, hi // g, ki, 0)),
+            pl.BlockSpec((block_q,), lambda bi, hi, qi, ki, vh, bm: (qi,)),
+            pl.BlockSpec((block_k,), lambda bi, hi, qi, ki, vh, bm: (ki,)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, hd),
+                               lambda bi, hi, qi, ki, vh, bm: (bi, hi, qi, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q, hd), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, h, s, hd), q.dtype),
+        interpret=interpret,
+    )(vh, jnp.asarray(block_map), q, k, v, pos, pos)

@@ -38,7 +38,11 @@ def fused_connective(
     """x, res, keep_mask: (S, d); scale, bias: (d,).  One pass over HBM."""
     s, d = x.shape
     block_s = min(block_s, s)
-    assert s % block_s == 0
+    if s % block_s:
+        raise ValueError(
+            f"connective of {s} rows does not tile into block_s={block_s} "
+            "blocks; the block must divide the row count"
+        )
     grid = (s // block_s,)
     kernel = functools.partial(_kernel, rate=rate, eps=eps)
     return pl.pallas_call(

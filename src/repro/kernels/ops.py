@@ -1,23 +1,132 @@
-"""Public jit'd wrappers for the Pallas kernels.
+"""Public wrappers for the Pallas kernels.
 
 On this CPU container the kernels run with ``interpret=True`` (the kernel
 body executes in Python via the Pallas interpreter — functionally identical
 to the TPU lowering).  On a real TPU backend ``interpret`` defaults to
 False and the same calls compile to Mosaic.
+
+Besides the standalone jit'd wrappers, this module is the dispatch point of
+the ``ExecPlan.compute_backend`` knob: :func:`gemm` and
+:func:`ragged_attention` are what the HMP executor (``core/hmp.py``) and the
+ring primitives (``core/ring.py``) call per shard.  ``backend="xla"`` keeps
+the padded dense einsum (the pad-and-mask correctness oracle);
+``backend="pallas"`` routes through the valid-length kernels, whose grids
+skip pad blocks so executed MXU work tracks each device's *assigned* units
+instead of ``max(units)``.  These run inside jitted shard_map bodies, so
+they are plain functions (no extra jit layer).
 """
 from __future__ import annotations
 
 import functools
 
 import jax
+import jax.numpy as jnp
 
 from repro.kernels.flash_attention import flash_attention as _flash
+from repro.kernels.flash_attention import ragged_flash_attention as _ragged_flash
 from repro.kernels.fused_connective import fused_connective as _connective
+from repro.kernels.tiled_gemm import divisor_block
 from repro.kernels.tiled_gemm import tiled_gemm as _gemm
+from repro.kernels.tiled_gemm import tiled_gemm_valid as _gemm_valid
 
 
 def _default_interpret() -> bool:
     return jax.default_backend() != "tpu"
+
+
+# --- compute-backend dispatch (ExecPlan.compute_backend) ----------------------
+
+COMPUTE_BACKENDS = ("xla", "pallas")
+
+
+def gemm(x, w, *, backend: str = "xla", valid_m=None, valid_n=None,
+         valid_k=None, seg_n=None, block_m: int = 128, block_n: int = 128,
+         block_k: int = 512, count_blocks: bool = False):
+    """(..., M, K) @ (K, N) through the selected compute backend.
+
+    Leading dims of ``x`` fold into the GEMM M axis as equal segments (one
+    per batch row), each with ``valid_m`` real leading rows.  ``valid_n``
+    names the real leading columns of each ``seg_n``-column segment of
+    ``w`` (e.g. the q/k/v thirds of a fused QKV weight) and ``valid_k`` the
+    real contraction prefix.  Valid counts may be traced scalars — they are
+    per-device quantities inside shard_map.
+
+    xla: a dense dot over the padded shapes with the valid counts applied
+    as masks (every pad block still executes — the SPMD oracle), so both
+    backends compute the identical function of the valid regions whatever
+    the pad regions hold.  pallas: the valid-length tiled kernel, shedding
+    whole pad blocks.  ``count_blocks=True`` (pallas only) also returns
+    the measured live-block count.
+    """
+    if backend not in COMPUTE_BACKENDS:
+        raise ValueError(f"unknown compute backend {backend!r}; "
+                         f"one of {COMPUTE_BACKENDS}")
+    if backend == "xla":
+        if count_blocks:
+            raise ValueError("count_blocks is a pallas-backend measurement")
+        m, kk = x.shape[-2], x.shape[-1]
+        n = w.shape[1]
+        if valid_m is not None:
+            rows = jnp.arange(m) < valid_m
+            x = jnp.where(rows[:, None], x, 0)
+        if valid_k is not None:
+            cols = jnp.arange(kk) < valid_k
+            x = jnp.where(cols[None, :], x, 0)
+        out = jnp.einsum("...mk,kn->...mn", x, w)
+        if valid_n is not None:
+            seg = n if seg_n is None else seg_n
+            keep = (jnp.arange(n) % seg) < valid_n
+            out = jnp.where(keep, out, 0)
+        return out
+    lead = x.shape[:-2]
+    seg_m = x.shape[-2]
+    x2 = x.reshape(-1, x.shape[-1])
+    out = _gemm_valid(
+        x2, w, valid_m=valid_m, valid_n=valid_n, valid_k=valid_k,
+        seg_m=seg_m, seg_n=seg_n, block_m=block_m, block_n=block_n,
+        block_k=block_k, count_blocks=count_blocks,
+        interpret=_default_interpret(),
+    )
+    if count_blocks:
+        out, cnt = out
+        return out.reshape(*lead, seg_m, w.shape[1]), cnt
+    return out.reshape(*lead, seg_m, w.shape[1])
+
+
+def ragged_attention(q, k, v, *, positions, valid_heads=None,
+                     block_q: int = 128, block_k: int = 128):
+    """Causal attention over a padded ragged row order, (B, S, H, hd)
+    executor layout.  ``positions`` is the static ``SeqLayout.positions``
+    map (-1 = pad row; ``arange`` for a dense layout) and ``valid_heads``
+    this device's real head count (traced scalar ok).  Pad rows/heads come
+    out exactly zero; always the pallas path (the xla equivalent is the
+    caller's masked einsum)."""
+    qt = q.transpose(0, 2, 1, 3)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+    out = _ragged_flash(
+        qt, kt, vt, positions=positions, valid_heads=valid_heads,
+        block_q=block_q, block_k=block_k, interpret=_default_interpret(),
+    )
+    return out.transpose(0, 2, 1, 3)
+
+
+def connective(x, res, scale, bias, *, block_s: int = 256):
+    """Fused residual-add + layernorm over (..., S, d) activations — the
+    Galaxy connective block as one HBM pass (dropout disabled at
+    inference).  Used by the pallas backend in place of the unfused
+    residual + LN pair."""
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1])
+    res2 = res.reshape(-1, res.shape[-1])
+    # rate=0: the keep-mask operand is never read — alias x itself rather
+    # than streaming a materialized all-ones buffer through VMEM
+    out = _connective(
+        x2, res2, x2, scale, bias, rate=0.0,
+        block_s=divisor_block(x2.shape[0], block_s),
+        interpret=_default_interpret(),
+    )
+    return out.reshape(*lead, x.shape[-1])
 
 
 @functools.partial(jax.jit, static_argnames=("causal", "window", "block_q", "block_k"))

@@ -1,7 +1,13 @@
-"""End-to-end serving driver: batched requests through the wave scheduler.
+"""End-to-end serving driver: batched requests through the serving engine.
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen1.5-0.5b --reduce \
       --requests 16 --prompt-len 32 --max-new 32
+
+``--executor galaxy`` serves through the paper-exact Galaxy HMP schedule on
+all local devices (an even ExecPlan over the device mesh) instead of the
+GSPMD model zoo; there ``--compute-backend pallas`` switches the per-shard
+compute path to the valid-length Pallas kernels (``ExecPlan.compute_backend``
+— pad-block work is shed per device; "xla" keeps the padded dense oracle).
 """
 from __future__ import annotations
 
@@ -14,6 +20,31 @@ import numpy as np
 from repro.configs import ASSIGNED_ARCHS, get_config, reduced
 from repro.models import init_params
 from repro.serving import Request, SamplerConfig, ServingEngine
+
+
+def _galaxy_executor(cfg, compute_backend: str):
+    """An even Galaxy HMP executor over every local device."""
+    from repro.core import hmp
+    from repro.core.execplan import ExecPlan
+    from repro.launch.mesh import make_mesh_compat
+    from repro.serving import GalaxyHMPExecutor
+
+    n = jax.device_count()
+    if cfg.num_heads % n or cfg.d_ff % n:
+        raise SystemExit(
+            f"{cfg.name}: {cfg.num_heads} heads / {cfg.d_ff} columns do not "
+            f"split over {n} local devices — pick a dividing arch/--reduce"
+        )
+    plan = ExecPlan.even(n, num_heads=cfg.num_heads, d_ff=cfg.d_ff,
+                         head_dim=cfg.head_dim, d_model=cfg.d_model)
+    mesh = make_mesh_compat((n,), ("model",))
+    layers = hmp.init_stack_params(
+        jax.random.PRNGKey(0), cfg.num_layers, cfg.d_model, cfg.num_heads,
+        cfg.d_ff)
+    embed = jax.random.normal(
+        jax.random.PRNGKey(1), (cfg.vocab_size, cfg.d_model)) * 0.02
+    return GalaxyHMPExecutor(layers, embed, plan, mesh,
+                             compute_backend=compute_backend)
 
 
 def main():
@@ -31,6 +62,17 @@ def main():
                          "implements the paged protocol, else waves")
     ap.add_argument("--page-size", type=int, default=16,
                     help="KV pool page size (continuous batching)")
+    ap.add_argument("--executor", choices=("zoo", "galaxy"), default="zoo",
+                    help="zoo = GSPMD model zoo; galaxy = paper-exact HMP "
+                         "schedule over all local devices")
+    ap.add_argument("--compute-backend", choices=("xla", "pallas"),
+                    default="xla",
+                    help="Galaxy per-shard compute path "
+                         "(ExecPlan.compute_backend): 'pallas' sheds "
+                         "pad-block work via the valid-length kernels; "
+                         "'xla' is the padded dense oracle.  Galaxy "
+                         "executor only — the zoo path is GSPMD-sharded "
+                         "and has no padded shards to shed")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -39,15 +81,24 @@ def main():
     if cfg.input_mode != "token":
         raise SystemExit(f"{cfg.name} is a stub-frontend arch; serve the token archs")
 
-    params = init_params(cfg, jax.random.PRNGKey(0))
-    engine = ServingEngine(
-        params, cfg,
+    engine_kwargs = dict(
         max_batch=args.max_batch,
         max_len=args.prompt_len + args.max_new,
         sampler=SamplerConfig(temperature=args.temperature),
         scheduler=args.scheduler,
         page_size=args.page_size,
     )
+    if args.executor == "galaxy":
+        engine = ServingEngine(
+            executor=_galaxy_executor(cfg, args.compute_backend),
+            **engine_kwargs)
+    else:
+        if args.compute_backend != "xla":
+            raise SystemExit(
+                "--compute-backend applies to --executor galaxy (the zoo "
+                "executor has no padded ExecPlan shards to shed)")
+        params = init_params(cfg, jax.random.PRNGKey(0))
+        engine = ServingEngine(params, cfg, **engine_kwargs)
 
     rng = np.random.default_rng(0)
     for i in range(args.requests):

@@ -27,7 +27,7 @@ padding rows are never read.
 """
 from __future__ import annotations
 
-from typing import Dict, List, Sequence
+from typing import Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -43,10 +43,17 @@ class GalaxyHMPExecutor:
     layers: stack of layer params in *reference* layout (init_layer_params);
             padded once here via ``plan.pad_layer_params``.
     embed:  (vocab, d_model) tied embedding / unembedding table.
+    compute_backend: overrides the plan's per-shard compute path
+            (``execplan.COMPUTE_BACKENDS``): "xla" is the padded dense
+            oracle, "pallas" sheds pad-block work in every prefill/decode
+            matmul (and the prefill attention) via ``kernels/ops.py``.
     """
 
     def __init__(self, layers: Sequence[Dict], embed, plan: ExecPlan,
-                 mesh: Mesh, *, overlap: bool = True):
+                 mesh: Mesh, *, overlap: bool = True,
+                 compute_backend: Optional[str] = None):
+        if compute_backend is not None:
+            plan = plan.with_backend(compute_backend)
         self.plan = plan
         self.mesh = mesh
         self.overlap = overlap

@@ -237,6 +237,65 @@ def test_seq_shares_validation():
                  seq_shares=(-1.0, 2.0))
 
 
+def test_compute_backend_knob():
+    """Backend validation, the shed-aware padded planner view, and the
+    effective-vs-padded FLOPs accounting behind ``describe()``."""
+    ep = ExecPlan.from_plan(_uneven_plan(), head_dim=2, d_model=32)
+    assert ep.compute_backend == "xla"
+    with pytest.raises(ValueError, match="compute_backend"):
+        ep.with_backend("cuda")
+    pal = ep.with_backend("pallas")
+    assert pal.compute_backend == "pallas" and pal.heads == ep.heads
+
+    # xla padded view executes max(units); pallas sheds back to assigned
+    assert np.all(ep.to_planner_plan(padded=True).mha == ep.pad_heads)
+    shed = pal.to_planner_plan(padded=True)
+    assert np.all(shed.mha == np.asarray(ep.heads))
+    assert np.all(shed.mlp == np.asarray(ep.columns))
+    # ...but the transport side still ships the padded sequence tile
+    assert np.allclose(shed.seq, ep.to_planner_plan(padded=True).seq)
+
+    eff = ep.device_gemm_flops()
+    pad = ep.device_gemm_flops(padded=True)
+    assert np.all(eff <= pad) and len(set(pad)) == 1
+    assert 0 < ep.flops_shed() < ep.padding_waste() + 0.1
+    # describe prints per-device effective-vs-padded FLOPs + the backend
+    assert "eff/pad flops=[" in ep.describe()
+    assert "backend=pallas" in pal.describe()
+
+
+def test_simulator_scores_shed_backend():
+    """simulate_execplan(padded=True) on a pallas plan prices effective
+    compute: between the unpadded view and the fully padded xla view."""
+    import dataclasses
+
+    from repro.configs import get_config
+    from repro.core import costmodel
+    from repro.core.profiler import AnalyticProfiler
+    from repro.core.simulator import simulate_execplan
+
+    cfg = dataclasses.replace(get_config("distilbert"), num_layers=1)
+    devices = [
+        costmodel.DeviceSpec(f"e{i}", flops=c * 7.1e9, mem_bw=4.0e9,
+                             memory_budget=1.5e9)
+        for i, c in enumerate([3.0, 2.0, 2.0, 1.0])
+    ]
+    link = costmodel.mbps(1000)
+    prof = AnalyticProfiler(cfg, 128)
+    pl = planner.plan(prof.model_profile(), prof.device_profiles(devices))
+    ep = ExecPlan.from_plan(pl, head_dim=cfg.head_dim, d_model=cfg.d_model)
+
+    plain = simulate_execplan(ep, cfg, devices, link, 128, overlap=True)
+    padded = simulate_execplan(ep, cfg, devices, link, 128, overlap=True,
+                               padded=True)
+    shed = simulate_execplan(ep.with_backend("pallas"), cfg, devices, link,
+                             128, overlap=True, padded=True)
+    assert plain.latency - 1e-12 <= shed.latency <= padded.latency + 1e-12
+    # the equal seq split makes transport identical: shedding recovers the
+    # whole compute-side padding premium here
+    assert shed.latency < padded.latency
+
+
 # --- multi-device: uneven plans through the real executor --------------------
 
 def test_uneven_plan_matches_reference():
@@ -536,6 +595,76 @@ def test_uneven_seq_serving_acceptance():
         assert r_bw.latency < r_eq.latency, (r_bw.latency, r_eq.latency)
         print(f'sim: aware {r_bw.latency*1e3:.1f}ms < equal '
               f'{r_eq.latency*1e3:.1f}ms')
+    """, devices=4)
+
+
+def test_pallas_backend_serving_acceptance():
+    """ISSUE acceptance: the pad-shedding pallas backend on an uneven
+    (heads, columns, sequence) 3:2:2:1 plan — greedy serving tokens through
+    ``compute_backend="pallas"`` equal the padded-XLA oracle equal the
+    full-context reference, on both schedulers; layer outputs agree across
+    backends for dividing and non-dividing lengths."""
+    run_multidevice("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.core import hmp
+        from repro.core.execplan import ExecPlan
+        from repro.launch.mesh import make_mesh_compat
+        from repro.serving import GalaxyHMPExecutor, Request, ServingEngine
+
+        ep = ExecPlan(heads=(6, 4, 4, 2), columns=(24, 16, 16, 8), head_dim=2,
+                      d_model=32, seq_shares=(3.0, 2.0, 2.0, 1.0))
+        mesh = make_mesh_compat((4,), ('model',))
+
+        # layer: pallas == xla == reference on ragged + dense lengths
+        p = hmp.init_layer_params(jax.random.PRNGKey(0), 32, 16, 64)
+        for s in (16, 13):
+            lay = ep.seq_layout(s)
+            x = jax.random.normal(jax.random.PRNGKey(1), (2, s, 32)) * 0.5
+            ref = hmp.reference_layer(p, x)
+            xp = lay.scatter(x)
+            for overlap in (False, True):
+                y_x = hmp.hmp_layer(p, xp, mesh, overlap=overlap, plan=ep,
+                                    seq=s)
+                y_p = hmp.hmp_layer(p, xp, mesh, overlap=overlap,
+                                    plan=ep.with_backend('pallas'), seq=s)
+                e_ref = float(jnp.abs(lay.gather(y_p) - ref).max())
+                e_xla = float(jnp.abs(y_p - y_x).max())
+                assert e_ref < 2e-5 and e_xla < 1e-4, (s, overlap, e_ref, e_xla)
+                print('layer seq', s, 'overlap', overlap, 'ok', e_ref, e_xla)
+
+        # serving: greedy tokens pallas == xla == full-context reference
+        vocab, n_layers = 50, 3
+        layers = hmp.init_stack_params(jax.random.PRNGKey(0), n_layers, 32, 16, 64)
+        emb = jax.random.normal(jax.random.PRNGKey(7), (vocab, 32)) * 0.5
+        prompts = [[1,2,3,4,5,6,7,8,9,10,11], [4,7,1,9,2,8,3,6,5,10,12],
+                   [3,1,4,1,5,9,2,6], [2,7,1,8]]
+
+        def run(backend, scheduler):
+            exe = GalaxyHMPExecutor(layers, emb, ep, mesh, overlap=True,
+                                    compute_backend=backend)
+            assert exe.plan.compute_backend == backend
+            eng = ServingEngine(executor=exe, max_batch=3, max_len=24,
+                                scheduler=scheduler, page_size=8)
+            for i, pr in enumerate(prompts):
+                eng.submit(Request(uid=i, prompt=list(pr), max_new_tokens=3 + i))
+            return {r.uid: r.output for r in eng.run()}
+
+        out = {(b, s): run(b, s) for b in ('xla', 'pallas')
+               for s in ('wave', 'continuous')}
+        assert out['pallas', 'wave'] == out['xla', 'wave']
+        assert out['pallas', 'continuous'] == out['xla', 'continuous']
+        assert out['pallas', 'continuous'] == out['pallas', 'wave']
+
+        for uid, pr in enumerate(prompts):
+            toks = list(pr)
+            for _ in range(3 + uid):
+                y = hmp.reference_stack(layers, emb[jnp.asarray([toks])])
+                toks.append(int(jnp.argmax(y[:, -1] @ emb.T, -1)[0]))
+            assert out['pallas', 'continuous'][uid] == toks[len(pr):], (
+                uid, out['pallas', 'continuous'][uid], toks[len(pr):])
+            print('request', uid, 'pallas tokens ok',
+                  out['pallas', 'continuous'][uid])
+        print('pallas == xla == reference on both schedulers')
     """, devices=4)
 
 

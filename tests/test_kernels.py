@@ -60,6 +60,55 @@ def test_fused_connective_sweep(s, d, rate):
     np.testing.assert_allclose(np.asarray(out), np.asarray(expected), atol=2e-5)
 
 
+def test_kernel_shape_errors_are_valueerrors():
+    """Bad tilings raise ValueError naming shapes/blocks (not a bare assert
+    that vanishes under ``python -O``)."""
+    x = jnp.zeros((100, 64))
+    w = jnp.zeros((64, 96))
+    with pytest.raises(ValueError, match="block_m=48"):
+        tiled_gemm(x, w, block_m=48, block_n=32, block_k=32, interpret=True)
+    with pytest.raises(ValueError, match="contraction mismatch"):
+        tiled_gemm(jnp.zeros((64, 32)), jnp.zeros((48, 96)), interpret=True)
+    q = jnp.zeros((1, 2, 100, 64))
+    with pytest.raises(ValueError, match="block_q=32"):
+        flash_attention(q, q, q, block_q=32, block_k=50, interpret=True)
+    with pytest.raises(ValueError, match="block_s"):
+        fused_connective(jnp.zeros((100, 8)), jnp.zeros((100, 8)),
+                         jnp.zeros((100, 8)), jnp.ones(8), jnp.zeros(8),
+                         block_s=32, interpret=True)
+    from repro.kernels.tiled_gemm import tiled_gemm_valid
+
+    with pytest.raises(ValueError, match="seg_m"):
+        tiled_gemm_valid(x, w, seg_m=48, interpret=True)
+
+
+def test_valid_gemm_matches_dense_when_fully_valid():
+    """With no valid counts the valid-length kernel is the dense GEMM."""
+    x = jax.random.normal(KEY, (64, 96), jnp.float32)
+    w = jax.random.normal(jax.random.PRNGKey(1), (96, 128), jnp.float32)
+    from repro.kernels.tiled_gemm import tiled_gemm_valid
+
+    out = tiled_gemm_valid(x, w, block_m=32, block_n=32, block_k=32,
+                           interpret=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref.tiled_gemm_ref(x, w)),
+                               atol=5e-4)
+
+
+def test_ops_gemm_backend_dispatch():
+    """ops.gemm: xla == pallas on clean (zero-padded) operands; batched
+    inputs fold into M segments; unknown backends are rejected."""
+    x = jax.random.normal(KEY, (2, 8, 16), jnp.float32)
+    w = jax.random.normal(jax.random.PRNGKey(1), (16, 12), jnp.float32)
+    w = w.at[:, 9:].set(0)  # pad columns zero, as ExecPlan materializes
+    dense = ops.gemm(x, w, backend="xla")
+    shed = ops.gemm(x, w, backend="pallas", valid_n=9, block_n=3)
+    np.testing.assert_allclose(np.asarray(shed), np.asarray(dense), atol=1e-5)
+    with pytest.raises(ValueError, match="backend"):
+        ops.gemm(x, w, backend="cuda")
+    with pytest.raises(ValueError, match="count_blocks"):
+        ops.gemm(x, w, backend="xla", count_blocks=True)
+
+
 def test_ops_wrappers_jit():
     """The public ops wrappers are jit-compatible on this backend."""
     q = jax.random.normal(KEY, (1, 2, 128, 64))

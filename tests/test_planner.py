@@ -12,6 +12,7 @@ from repro.core.planner import (
     balanced_partition,
     memory_aware_balancing,
     plan,
+    regularize_pad_spread,
 )
 
 BERT_L = ModelProfile("bert-l", num_layers=24, num_heads=16, mlp_columns=4096,
@@ -94,6 +95,31 @@ def test_property_balanced_partition_sums(caps, total):
         for j in range(len(caps)):
             if caps[i] > caps[j]:
                 assert out[i] >= out[j] - 1  # rounding slack of 1 unit
+
+
+def test_regularize_pad_spread_tradeoff():
+    """pad_penalty co-optimizes balance vs max(units) spread: zero penalty
+    is a no-op, a huge penalty converges to the equal split, and a moderate
+    one lands between — always preserving the unit total."""
+    caps = [3.0, 2.0, 2.0, 1.0]
+    units = balanced_partition(16, caps)
+    assert units.tolist() == [6, 4, 4, 2]
+
+    assert regularize_pad_spread(units, caps, 0.0).tolist() == [6, 4, 4, 2]
+    heavy = regularize_pad_spread(units, caps, 100.0)
+    assert heavy.sum() == 16 and heavy.max() == 4  # equal split: no padding
+    mild = regularize_pad_spread(units, caps, 0.5)
+    assert mild.sum() == 16 and 4 <= mild.max() <= 6
+
+    # through plan(): the padded straggler share shrinks monotonically
+    model = ModelProfile("tiny", 2, 16, 64, 1e6, 2e6)
+    devs = _devices(caps, [1e12] * 4)
+    p0 = plan(model, devs)
+    p1 = plan(model, devs, pad_penalty=100.0)
+    assert p1.feasible
+    assert p1.mha.max() <= p0.mha.max()
+    assert p1.mlp.max() <= p0.mlp.max()
+    assert p1.mha.sum() == 16 and p1.mlp.sum() == 64
 
 
 @settings(max_examples=100, deadline=None)

@@ -92,6 +92,11 @@ def _score(eplan, cfg, devices, link, seq):
         "padded_us": simulate_execplan(
             eplan, cfg, devices, link, seq, overlap=True,
             padded=True).latency * 1e6,
+        # SPMD execution with the pad-shedding pallas backend: compute at
+        # effective units, transport still ships the padded sequence tile
+        "padshed_us": simulate_execplan(
+            eplan.with_backend("pallas"), cfg, devices, link, seq,
+            overlap=True, padded=True).latency * 1e6,
     }
 
 
