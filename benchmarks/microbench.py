@@ -456,6 +456,7 @@ def continuous_vs_wave() -> Iterator[Row]:
     """
     import statistics
 
+    from benchmarks.run import ttft_percentiles
     from repro.configs import get_config, reduced
     from repro.models import init_params
     from repro.serving import Request, ServingEngine
@@ -486,6 +487,7 @@ def continuous_vs_wave() -> Iterator[Row]:
 
     results = {}
     outputs = {}
+    done_by = {}
     for scheduler in ("wave", "continuous"):
         run_once(scheduler, timed=False)  # warm the jit caches
         done, wall, stats = run_once(scheduler, timed=True)
@@ -495,6 +497,7 @@ def continuous_vs_wave() -> Iterator[Row]:
             gaps.extend(np.diff(r.token_times))
         results[scheduler] = (wall, toks, stats["decode_steps"], gaps)
         outputs[scheduler] = {r.uid: tuple(r.output) for r in done}
+        done_by[scheduler] = done
     assert outputs["wave"] == outputs["continuous"], \
         "greedy tokens diverged between schedulers"
 
@@ -509,6 +512,98 @@ def continuous_vs_wave() -> Iterator[Row]:
            f"tokens/s={cont_toks / cont_wall:.1f},steps={cont_steps},"
            f"p50={q(cont_gaps, 50):.1f}ms,p95={q(cont_gaps, 95):.1f}ms,"
            f"speedup={wave_wall / cont_wall:.2f}x")
+    for scheduler in ("wave", "continuous"):
+        ttft = ttft_percentiles(done_by[scheduler])
+        yield (f"serve/{scheduler}_ttft_p95", ttft["p95"] * 1e6,
+               f"first-token latency,p50={ttft['p50'] * 1e3:.1f}ms,"
+               f"n={ttft['n']}")
+
+
+def prefix_sharing() -> Iterator[Row]:
+    """Shared-prefix KV cache on a skewed request mix with a common
+    256-token system prompt: tokens/sec + TTFT p50/p95, prefix cache on vs
+    off (``serving/prefix_cache.py`` radix tree over refcounted pool pages).
+
+    Acceptance gates (raise, not assert — they must also gate under -O):
+
+    1. Suffix-only prefill: with the cache on, the engine's measured
+       prefill token count equals ``sum(prompt_len - cached_prefix_len)``
+       over all requests (prefix-hit tokens are *not* recomputed).
+    2. Sharing is real: >= 1 physical page is referenced by >= 2 concurrent
+       slots at some admission, with the pool's refcount algebra verified
+       by ``PagedKVPool.check()`` on every sharing admission.
+    3. Greedy tokens are identical cache on vs off (the engine contract).
+    """
+    from benchmarks.run import ttft_percentiles
+    from repro.configs import get_config, reduced
+    from repro.models import init_params
+    from repro.serving import Request, ServingEngine, TransformerExecutor
+
+    cfg = reduced(get_config("qwen1.5-0.5b"))
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    executor = TransformerExecutor(params, cfg)  # shared jit caches
+
+    prefix_len, tail_len = 256, 16
+    system_prompt = [11 + (i * 13) % 150 for i in range(prefix_len)]
+
+    def requests():
+        return [
+            Request(uid=i,
+                    prompt=system_prompt
+                    + [200 + (i * 7 + j) % 50 for j in range(tail_len)],
+                    max_new_tokens=24 if i % 4 == 0 else 6)
+            for i in range(12)
+        ]
+
+    def run_once(prefix_cache: bool, timed: bool):
+        eng = ServingEngine(executor=executor, max_batch=4,
+                            max_len=prefix_len + tail_len + 32,
+                            scheduler="continuous", page_size=16,
+                            prefix_cache=prefix_cache, record_times=timed)
+        for r in requests():
+            eng.submit(r)
+        t0 = time.perf_counter()
+        done = eng.run()
+        wall = time.perf_counter() - t0
+        return done, wall, eng.stats, eng.prefix_stats
+
+    runs = {}
+    for on in (False, True):
+        run_once(on, timed=False)  # warm the jit caches
+        runs[on] = run_once(on, timed=True)
+
+    done_off, wall_off, stats_off, _ = runs[False]
+    done_on, wall_on, stats_on, pstats = runs[True]
+    if ({r.uid: tuple(r.output) for r in done_off}
+            != {r.uid: tuple(r.output) for r in done_on}):
+        raise RuntimeError("greedy tokens diverged between prefix cache on/off")
+    total_prompt = sum(len(r.prompt) for r in done_on)
+    cached = stats_on["cached_prefix_tokens"]
+    if cached <= 0:
+        raise RuntimeError("prefix cache never hit on a shared system prompt")
+    if stats_on["prefill_tokens"] + cached != total_prompt:
+        raise RuntimeError(
+            f"suffix-only prefill broken: computed {stats_on['prefill_tokens']}"
+            f" + cached {cached} != prompt tokens {total_prompt}"
+        )
+    if stats_on["peak_shared_pages"] < 1:
+        raise RuntimeError("no physical page was shared across >=2 live slots")
+
+    for on, label in ((False, "prefix_off"), (True, "prefix_on")):
+        done, wall, stats, _ = runs[on]
+        toks = sum(len(r.output) for r in done)
+        ttft = ttft_percentiles(done)
+        extra = ""
+        if on:
+            extra = (f",hit_rate={pstats['hit_rate']:.0%},"
+                     f"cached_tokens={cached},"
+                     f"shared_pages={stats['peak_shared_pages']},"
+                     f"prefill={stats['prefill_tokens']}/{total_prompt},"
+                     f"speedup={wall_off / wall_on:.2f}x")
+        yield (f"serve/{label}_us_per_token", wall / toks * 1e6,
+               f"tokens/s={toks / wall:.1f},"
+               f"ttft_p50={ttft['p50'] * 1e3:.1f}ms,"
+               f"ttft_p95={ttft['p95'] * 1e3:.1f}ms{extra}")
 
 
 def continuous_vs_wave_galaxy() -> Iterator[Row]:
@@ -575,4 +670,5 @@ print(f"page_bytes,{ep.kv_page_bytes(8)},{ep.describe()}")
 
 ALL = [kernel_fusion, flash_vs_naive, profiler_blocks,
        hmp_schedules_multidevice, execplan_uneven, execplan_raggedsp,
-       execplan_padshed, continuous_vs_wave, continuous_vs_wave_galaxy]
+       execplan_padshed, continuous_vs_wave, continuous_vs_wave_galaxy,
+       prefix_sharing]

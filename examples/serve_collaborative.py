@@ -33,6 +33,15 @@ the engine-level contract tests pin both executors against it); executors
 without the paged protocol fall back to it automatically.  Prompt padding
 policy belongs to the executor (``prompt_pad_multiple``): 1 for the
 single-device zoo, the mesh size for the SP-sharded Galaxy prefill.
+
+Prompt-heavy traffic adds two continuous-scheduler features (see
+``prefix_sharing_demo`` and the ``--prefix-cache on|off`` /
+``--prefill-chunk N`` flags here and on ``launch/serve.py``): the
+shared-prefix KV cache admission flow — radix-tree lookup of the prompt ->
+refcount bump on the hit's shared pages -> suffix-only chunked prefill ->
+insert the new full pages for later requests — and chunked prefill, which
+interleaves page-sized prefill chunks with decode steps so long prompts
+stop stalling live slots.
 """
 import os
 import subprocess
@@ -213,6 +222,52 @@ def padshed_backend_demo():
     subprocess.run([sys.executable, "-c", code], env=env, check=True)
 
 
+def prefix_sharing_demo(prefix_cache: str = "on", prefill_chunk=16):
+    """Shared-prefix KV cache + chunked prefill (the admission flow:
+    radix-tree lookup -> shared-page refcount bump -> suffix-only chunked
+    prefill).  Requests carrying a common system prompt map its pages to
+    the *same* refcounted pool pages (``serving/prefix_cache.py``), so only
+    each request's own tail is prefetched — and with ``prefill_chunk`` the
+    engine interleaves prefill chunks with decode steps instead of stalling
+    live slots.  Prints hit-rate stats from ``PrefixCache.stats()``."""
+    import time
+
+    import jax
+    import numpy as np
+    from repro.configs import get_config, reduced
+    from repro.models import init_params
+    from repro.serving import Request, ServingEngine, TransformerExecutor
+
+    cfg = reduced(get_config("qwen1.5-0.5b"))
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    executor = TransformerExecutor(params, cfg)
+    rng = np.random.default_rng(0)
+    system_prompt = rng.integers(1, 400, 48).tolist()
+
+    print(f"Shared-prefix KV cache (--prefix-cache {prefix_cache}, "
+          f"--prefill-chunk {prefill_chunk}):")
+    for on in ([False, True] if prefix_cache == "on" else [False]):
+        for _ in range(2):  # first pass warms the jit caches
+            eng = ServingEngine(executor=executor, max_batch=4, max_len=96,
+                                scheduler="continuous", page_size=8,
+                                prefix_cache=on, prefill_chunk=prefill_chunk)
+            for i in range(10):
+                tail = rng.integers(1, 400, 8).tolist()
+                eng.submit(Request(uid=i, prompt=system_prompt + tail,
+                                   max_new_tokens=8))
+            t0 = time.perf_counter()
+            done = eng.run()
+            wall = time.perf_counter() - t0
+        toks = sum(len(r.output) for r in done)
+        label = "prefix cache on " if on else "prefix cache off"
+        print(f"  {label} {toks} tokens in {wall*1e3:6.1f}ms "
+              f"({toks/wall:6.1f} tok/s, prefilled "
+              f"{eng.stats['prefill_tokens']} prompt tokens, "
+              f"{eng.stats['peak_shared_pages']} pages shared)")
+        if on:
+            print(f"  PrefixCache.stats(): {eng.prefix_stats}")
+
+
 def galaxy_serving_demo():
     """Uneven planner output served end-to-end: plan -> ExecPlan ->
     GalaxyHMPExecutor -> continuous batching over the paged head-sharded
@@ -250,9 +305,20 @@ def galaxy_serving_demo():
 
 
 if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--prefix-cache", choices=("on", "off"), default="on",
+                    help="shared-prefix KV cache in prefix_sharing_demo "
+                         "(off runs the baseline only)")
+    ap.add_argument("--prefill-chunk", type=int, default=16, metavar="N",
+                    help="prefill chunk size (tokens) for prefix_sharing_demo")
+    args = ap.parse_args()
+
     serve_demo()
     hmp_demo()
     continuous_batching_demo()
     galaxy_serving_demo()
     raggedsp_serving_demo()
     padshed_backend_demo()
+    prefix_sharing_demo(args.prefix_cache, args.prefill_chunk)

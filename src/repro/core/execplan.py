@@ -433,6 +433,21 @@ class ExecPlan:
             else np.asarray(self.columns)
         return seq * (heads * head_flops + cols * col_flops).astype(float)
 
+    def prefill_gemm_flops(self, seq: int, cached_prefix: int = 0,
+                           padded: bool = False) -> np.ndarray:
+        """(D,) per-shard GEMM FLOPs of one layer's prefill when the leading
+        ``cached_prefix`` positions are shared-prefix KV-cache hits
+        (``serving/prefix_cache.py``): projections and MLP run only over the
+        uncached suffix rows — the prefix KV is gathered from shared pages,
+        not recomputed.  The attention core (not a GEMM here) still reads
+        the full context; ``simulate_execplan(cached_prefix=)`` prices that
+        term."""
+        if not 0 <= cached_prefix < seq:
+            raise ValueError(
+                f"cached_prefix {cached_prefix} must lie in [0, seq={seq})"
+            )
+        return self.device_gemm_flops(seq - cached_prefix, padded=padded)
+
     def flops_shed(self) -> float:
         """Fraction of padded dense GEMM FLOPs a shedding backend skips
         (FLOPs-weighted counterpart of the unit-count ``padding_waste``)."""

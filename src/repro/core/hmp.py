@@ -48,7 +48,11 @@ Serving path: ``hmp_prefill`` / ``hmp_decode`` run a *stack* of layers
 through the Galaxy schedule against a head-sharded KV cache — prefill is
 the full TP/SP + ring program; decode is the single-token degenerate case
 (pure TP with an AllReduce; an SP split of one token is meaningless), which
-is what ``serving/galaxy.py`` drives from the wave scheduler.
+is what ``serving/galaxy.py`` drives from the wave scheduler.  The paged
+variants back continuous batching, and ``hmp_prefill_paged(offset=)`` is
+the chunked/suffix-only entry point: a chunk starting at an absolute offset
+attends back to the KV pages already written by a shared prompt prefix
+(``serving/prefix_cache.py``) and earlier chunks.
 
 The production models use the GSPMD expression of the same layout
 (models/sharding.py); this module is the paper-exact schedule used for
@@ -234,9 +238,35 @@ def _make_compute(backend: str, plan: Optional[ExecPlan],
     return _PallasCompute(plan, positions)
 
 
+def _ctx_attention(q, k, v, ctx, layout: Optional[SeqLayout]):
+    """Chunked-prefill attention: chunk queries attend to already-written
+    context pages plus the chunk's own K/V.
+
+    ``ctx = (ctx_k, ctx_v, offset)``: ctx_k/ctx_v are (T, h_loc, hd)
+    block-row gathers over *absolute* positions [0, T); only positions
+    ``< offset`` (shared prefix pages + earlier chunks) are unmasked, so
+    stale/null-page rows never contribute — they are exact zeros after the
+    softmax, which keeps chunked outputs equal to the one-shot prefill.
+    The local (chunk) part keeps the usual causal/ragged mask: relative
+    causality inside a chunk is offset-invariant, and every context key
+    precedes every real chunk query (ctx_pos < offset <= q_pos)."""
+    ctx_k, ctx_v, offset = ctx
+    s, t = q.shape[1], ctx_k.shape[0]
+    if layout is not None:
+        local = jnp.asarray(layout.attention_mask())
+    else:
+        local = jnp.tril(jnp.ones((s, s), bool))
+    ctx_mask = jnp.broadcast_to(jnp.arange(t)[None, :] < offset, (s, t))
+    mask = jnp.concatenate([ctx_mask, local], axis=1)
+    kf = jnp.concatenate([ctx_k[None].astype(k.dtype), k], axis=1)
+    vf = jnp.concatenate([ctx_v[None].astype(v.dtype), v], axis=1)
+    return _attention(q, kf, vf, mask=mask)
+
+
 def _hmp_layer_local(p, x_loc, *, overlap: bool, return_kv: bool = False,
                      layout: Optional[SeqLayout] = None,
-                     plan: Optional[ExecPlan] = None, backend: str = "xla"):
+                     plan: Optional[ExecPlan] = None, backend: str = "xla",
+                     ctx=None):
     """Body on one device.  x_loc: (B, S_loc, d) sequence shard; params are
     head/column shards (possibly ExecPlan-padded with zero weights).  TP
     blocks see the full sequence; connective blocks see the local shard
@@ -248,7 +278,14 @@ def _hmp_layer_local(p, x_loc, *, overlap: bool, return_kv: bool = False,
     attention mask encodes causality over the padded row order.  Garbage in
     pad rows stays confined to pad rows — LN and residuals are rowwise, the
     rings zero their pad inputs, and attention masks pad keys — so every
-    valid row is exact."""
+    valid row is exact.
+
+    ``ctx`` (chunked prefill; see ``_ctx_attention``) makes the attention
+    additionally read already-written KV pages: the chunk's queries attend
+    to context keys at absolute positions below the chunk offset.  The
+    attention core then takes the XLA path even under the pallas backend
+    (like decode it is a page-gather, not a self-attention the ragged flash
+    kernel covers); the TP GEMMs still shed pad blocks."""
     ag_mm = ring_allgather_matmul if overlap else sync_allgather_matmul
     mm_rs = matmul_ring_reducescatter if overlap else sync_matmul_reducescatter
 
@@ -273,7 +310,9 @@ def _hmp_layer_local(p, x_loc, *, overlap: bool, return_kv: bool = False,
     q, k, v = jnp.split(qkv, 3, axis=-1)
     shape = (*q.shape[:2], h_loc, hd)
     k, v = k.reshape(shape), v.reshape(shape)
-    if compute is not None:
+    if ctx is not None:
+        attn = _ctx_attention(q.reshape(shape), k, v, ctx, layout)
+    elif compute is not None:
         attn = compute.attention(q.reshape(shape), k, v)
     else:
         attn = _attention(q.reshape(shape), k, v, mask=attn_mask)
@@ -568,9 +607,36 @@ def _prefill_paged_layer_local(p, x_loc, pk, pv, phys, within, *, overlap,
     return y_loc, pk, pv
 
 
+def _prefill_chunk_layer_local(p, x_loc, pk, pv, phys, within, block_row,
+                               offset, *, overlap,
+                               layout: Optional[SeqLayout] = None,
+                               plan: Optional[ExecPlan] = None,
+                               backend: str = "xla"):
+    """Chunked-prefill step for one layer: gather the request's pages as
+    attention context (positions below ``offset`` — shared prefix pages and
+    earlier chunks — are valid; later rows are masked in ``_ctx_attention``),
+    run the chunk, then scatter its K/V head shards into the pages at
+    absolute positions.  The gather happens *before* the scatter, so the
+    chunk's own keys enter attention exactly once (from the fresh K/V)."""
+    page_size = pk.shape[1]
+    w = block_row.shape[0]
+    h_loc, hd = p["wq"].shape[1], p["wq"].shape[2]
+    ctx_k = pk[block_row].reshape(w * page_size, h_loc, hd)
+    ctx_v = pv[block_row].reshape(w * page_size, h_loc, hd)
+    y_loc, k, v = _hmp_layer_local(p, x_loc, overlap=overlap, return_kv=True,
+                                   layout=layout, plan=plan, backend=backend,
+                                   ctx=(ctx_k, ctx_v, offset))
+    if layout is not None:
+        k, v = k[:, layout.rows], v[:, layout.rows]
+    pk = pk.at[phys, within].set(k[0])
+    pv = pv.at[phys, within].set(v[0])
+    return y_loc, pk, pv
+
+
 def hmp_prefill_paged(layers: Sequence[Dict], x, mesh: Mesh,
                       pages: List[Dict], block_row, *, plan: ExecPlan,
-                      overlap: bool = False, seq: Optional[int] = None):
+                      overlap: bool = False, seq: Optional[int] = None,
+                      offset=None):
     """Run a stack of HMP layers over one prompt, writing KV into pool pages.
 
     x: (1, S, d) — the (bucket-padded) prompt for a dense layout, or the
@@ -579,6 +645,14 @@ def hmp_prefill_paged(layers: Sequence[Dict], x, mesh: Mesh,
     overwrites before reading, same as before.  block_row:
     (pages_per_slot,) physical page ids for this request's logical pages.
     Returns (y, pages).
+
+    ``offset`` (chunked prefill / shared-prefix suffix prefill): when given
+    (a traced int32 scalar is fine — one compiled program per chunk shape),
+    x is one *chunk* of the prompt starting at absolute position ``offset``;
+    K/V land in the pages at [offset, offset + seq) and the chunk attends
+    back to every already-written position below ``offset`` by gathering
+    the block row as context.  ``offset=None`` keeps the one-shot program
+    unchanged.
     """
     if x.shape[0] != 1:
         raise ValueError("paged prefill is per-request: batch must be 1")
@@ -592,22 +666,33 @@ def hmp_prefill_paged(layers: Sequence[Dict], x, mesh: Mesh,
             f"prompt of {s} positions exceeds the block row "
             f"({block_row.shape[0]} pages x {page_size})"
         )
-    pos = jnp.arange(s)
+    backend = plan.compute_backend
+    if offset is None:
+        pos = jnp.arange(s)
+        body = functools.partial(_prefill_paged_layer_local, overlap=overlap,
+                                 layout=layout, plan=plan, backend=backend)
+        extra_specs = ()
+        extras = ()
+    else:
+        offset = jnp.asarray(offset, jnp.int32)
+        pos = offset + jnp.arange(s)
+        body = functools.partial(_prefill_chunk_layer_local, overlap=overlap,
+                                 layout=layout, plan=plan, backend=backend)
+        extra_specs = (P(), P())
+        extras = (jnp.asarray(block_row, jnp.int32), offset)
     phys = block_row[pos // page_size].astype(jnp.int32)
     within = (pos % page_size).astype(jnp.int32)
-    backend = plan.compute_backend
     fn = shard_map(
-        functools.partial(_prefill_paged_layer_local, overlap=overlap,
-                          layout=layout, plan=plan, backend=backend),
+        body,
         mesh=mesh,
         in_specs=(layer_param_specs(), P(None, AXIS, None),
-                  PAGED_CACHE_SPEC, PAGED_CACHE_SPEC, P(), P()),
+                  PAGED_CACHE_SPEC, PAGED_CACHE_SPEC, P(), P(), *extra_specs),
         out_specs=(P(None, AXIS, None), PAGED_CACHE_SPEC, PAGED_CACHE_SPEC),
         check_rep=backend == "xla",
     )
     new_pages = []
     for p, c in zip(layers, pages):
-        x, pk, pv = fn(p, x, c["k"], c["v"], phys, within)
+        x, pk, pv = fn(p, x, c["k"], c["v"], phys, within, *extras)
         new_pages.append({"k": pk, "v": pv})
     return x, new_pages
 

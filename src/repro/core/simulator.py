@@ -74,6 +74,7 @@ def simulate(
     seq: int,
     schedule: str,
     plan: Optional[planner.Plan] = None,
+    context_len: Optional[int] = None,
 ) -> SimResult:
     """Score one schedule on a simulated edge cluster.
 
@@ -84,9 +85,25 @@ def simulate(
     ``plan`` (galaxy schedules only) scores an externally supplied partition
     — e.g. one re-expressed from an ``ExecPlan`` — instead of re-running the
     planner, so the simulator and the real executor consume the *same* plan.
+
+    ``context_len`` (galaxy schedules only) prices a *suffix-only* prefill
+    after a shared-prefix KV-cache hit: ``seq`` is the uncached suffix the
+    layer GEMMs/transport/connective actually run over, while the attention
+    core reads keys for the full ``context_len`` positions (the cached
+    prefix is gathered from shared pages, not recomputed) — its
+    :math:`S'^2` self-attention term rescales to :math:`S' \\cdot K`.
     """
     if plan is not None and schedule not in ("galaxy", "galaxy_overlap"):
         raise ValueError(f"plan= only applies to galaxy schedules, not {schedule!r}")
+    if context_len is not None:
+        if schedule not in ("galaxy", "galaxy_overlap"):
+            raise ValueError(
+                f"context_len= only applies to galaxy schedules, not {schedule!r}"
+            )
+        if context_len < seq:
+            raise ValueError(
+                f"context_len {context_len} must cover the suffix of {seq} rows"
+            )
     d_n = len(devices)
     links = costmodel.as_ring_links(link, d_n)
     link = costmodel.bottleneck_link(links, d_n)
@@ -164,6 +181,10 @@ def simulate(
         mlp1_flops = (gate - 1) * 2 * seq * dm * cfg.d_ff
         mlp2_flops = 2 * seq * dm * cfg.d_ff
 
+        if context_len is not None and seq > 0:
+            # suffix queries attend over the full context: the S'^2 core
+            # becomes S' * K (scores + weighted sum are linear in keys)
+            attn_core = attn_core * (context_len / seq)
         t_attn_core = np.max(a_frac * attn_core / flops)
         # connective blocks run at each device's own (possibly uneven)
         # sequence tile, memory-bandwidth-bound
@@ -207,8 +228,15 @@ def simulate_execplan(
     *,
     overlap: bool = True,
     padded: bool = False,
+    cached_prefix: int = 0,
 ) -> SimResult:
     """Score the exact plan the executor runs (``core/execplan.ExecPlan``).
+
+    ``cached_prefix`` prices a shared-prefix KV-cache hit
+    (``serving/prefix_cache.py``): prefill runs only over the
+    ``seq - cached_prefix`` uncached suffix rows (GEMMs, ring transport and
+    connective all shrink with the suffix), while the attention core still
+    reads the full ``seq`` keys from the shared pages.
 
     ``padded=False`` scores the planner's assigned workload (paper Eq. 4/5);
     ``padded=True`` scores the SPMD execution view, which depends on the
@@ -228,6 +256,14 @@ def simulate_execplan(
             f"plan covers {eplan.num_devices} devices, cluster has {len(devices)}"
         )
     schedule = "galaxy_overlap" if overlap else "galaxy"
+    if cached_prefix:
+        if not 0 <= cached_prefix < seq:
+            raise ValueError(
+                f"cached_prefix {cached_prefix} must lie in [0, seq={seq})"
+            )
+        return simulate(cfg, devices, link, seq - cached_prefix, schedule,
+                        plan=eplan.to_planner_plan(padded=padded),
+                        context_len=seq)
     return simulate(cfg, devices, link, seq, schedule,
                     plan=eplan.to_planner_plan(padded=padded))
 

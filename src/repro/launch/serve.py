@@ -8,6 +8,12 @@ all local devices (an even ExecPlan over the device mesh) instead of the
 GSPMD model zoo; there ``--compute-backend pallas`` switches the per-shard
 compute path to the valid-length Pallas kernels (``ExecPlan.compute_backend``
 — pad-block work is shed per device; "xla" keeps the padded dense oracle).
+
+``--prefix-cache on`` shares prompt-prefix KV across requests through the
+radix-tree cache (``serving/prefix_cache.py``; requests get a common system
+prompt so hits occur) and ``--prefill-chunk N`` interleaves N-token prefill
+chunks with decode steps — both continuous-scheduler features, on either
+executor.
 """
 from __future__ import annotations
 
@@ -62,6 +68,17 @@ def main():
                          "implements the paged protocol, else waves")
     ap.add_argument("--page-size", type=int, default=16,
                     help="KV pool page size (continuous batching)")
+    ap.add_argument("--prefix-cache", choices=("on", "off"), default="off",
+                    help="shared-prefix KV cache (serving/prefix_cache.py): "
+                         "requests with a common page-aligned prompt prefix "
+                         "map it to the same refcounted pool pages and "
+                         "prefill only the uncached suffix (continuous "
+                         "scheduler only)")
+    ap.add_argument("--prefill-chunk", type=int, default=None, metavar="N",
+                    help="chunked prefill: interleave N-token prefill chunks "
+                         "with decode steps instead of stalling live slots "
+                         "for a whole long-prompt prefill (continuous "
+                         "scheduler only)")
     ap.add_argument("--executor", choices=("zoo", "galaxy"), default="zoo",
                     help="zoo = GSPMD model zoo; galaxy = paper-exact HMP "
                          "schedule over all local devices")
@@ -87,6 +104,8 @@ def main():
         sampler=SamplerConfig(temperature=args.temperature),
         scheduler=args.scheduler,
         page_size=args.page_size,
+        prefix_cache=args.prefix_cache == "on",
+        prefill_chunk=args.prefill_chunk,
     )
     if args.executor == "galaxy":
         engine = ServingEngine(
@@ -101,9 +120,15 @@ def main():
         engine = ServingEngine(params, cfg, **engine_kwargs)
 
     rng = np.random.default_rng(0)
+    # with the prefix cache on, model the traffic it targets: a shared
+    # system prompt (half the prompt) ahead of each request's own tail
+    shared = (rng.integers(0, cfg.vocab_size, size=args.prompt_len // 2).tolist()
+              if args.prefix_cache == "on" else [])
     for i in range(args.requests):
-        prompt = rng.integers(0, cfg.vocab_size, size=args.prompt_len).tolist()
-        engine.submit(Request(uid=i, prompt=prompt, max_new_tokens=args.max_new))
+        tail = rng.integers(
+            0, cfg.vocab_size, size=args.prompt_len - len(shared)).tolist()
+        engine.submit(Request(uid=i, prompt=shared + tail,
+                              max_new_tokens=args.max_new))
 
     t0 = time.time()
     done = engine.run()
@@ -112,6 +137,8 @@ def main():
     print(f"served {len(done)} requests in {dt:.2f}s "
           f"({new_tokens} new tokens, {new_tokens/dt:,.1f} tok/s)")
     print(f"stats: {engine.stats}")
+    if engine.prefix_stats is not None:
+        print(f"prefix cache: {engine.prefix_stats}")
 
 
 if __name__ == "__main__":

@@ -162,7 +162,10 @@ def self_attention_block(
     mode: "train" | "prefill" | "decode".
     window: 0 for full causal, >0 for sliding-window (rolling cache).
     positions: (B, S) absolute token positions (rope + causal mask).
-    cache_index: scalar int32 — write offset into the cache (prefill: 0).
+    cache_index: write offset into the cache.  Decode: scalar or (B,)
+    per-slot depths.  Prefill: None for the one-shot path; a scalar offset
+    selects *chunked* prefill — the chunk writes at [offset, offset+S) and
+    attends back to the cache's already-filled positions.
     """
     xn = connective_norm(x, p["ln1"], cfg.norm)
     xg = constrain(xn, ("batch", None, "embed"))  # AllGather: enter TP block
@@ -173,7 +176,27 @@ def self_attention_block(
         k = rope(k, positions, cfg.rope_theta)
 
     new_cache = None
-    if mode in ("train", "prefill"):
+    if mode == "prefill" and cache_index is not None:
+        # chunked prefill at an offset (paged serving): write this chunk's
+        # K/V at [cache_index, cache_index + S) of the gathered cache view
+        # and attend to everything written so far.  Keys beyond the chunk's
+        # last position (stale / null-page rows of the page gather) sit at
+        # k_pos > max(q_pos) and are causally masked, so they contribute
+        # exact zeros — chunked logits equal the one-shot prefill's.
+        if window > 0:
+            raise ValueError("chunked prefill requires full-causal attention")
+        if cache is None:
+            raise ValueError("chunked prefill needs the gathered cache view")
+        off = jnp.asarray(cache_index, jnp.int32)
+        k_cache = jax.lax.dynamic_update_slice(cache["k"], k, (0, off, 0, 0))
+        v_cache = jax.lax.dynamic_update_slice(cache["v"], v, (0, off, 0, 0))
+        k_cache = constrain(k_cache, CACHE_AXES)
+        v_cache = constrain(v_cache, CACHE_AXES)
+        new_cache = {"k": k_cache, "v": v_cache}
+        mask = causal_window_mask(positions, jnp.arange(k_cache.shape[1]), 0)
+        probs = _softmax(_gqa_scores(q, k_cache, cfg), mask)
+        out = _gqa_output(probs.astype(v.dtype), v_cache, cfg)
+    elif mode in ("train", "prefill"):
         if cfg.attn_chunk and q.shape[1] > cfg.attn_chunk:
             out = _chunked_causal_attention(q, k, v, positions, window, cfg)
         else:

@@ -163,6 +163,12 @@ def apply_model(
                 positions = jnp.broadcast_to(ci[:, None], (bsz, seq))
             else:
                 positions = jnp.full((bsz, seq), ci, jnp.int32)
+        elif mode == "prefill" and cache_index is not None:
+            # chunked prefill: the chunk's rows sit at absolute positions
+            # [cache_index, cache_index + seq)
+            ci = jnp.asarray(cache_index, jnp.int32)
+            positions = ci + jnp.broadcast_to(
+                jnp.arange(seq, dtype=jnp.int32), (bsz, seq))
         else:
             positions = jnp.broadcast_to(jnp.arange(seq, dtype=jnp.int32), (bsz, seq))
 

@@ -2,10 +2,11 @@ from repro.serving.engine import Request, ServingEngine, TransformerExecutor
 from repro.serving.galaxy import GalaxyHMPExecutor
 from repro.serving.kvcache import cache_bytes, make_cache
 from repro.serving.kvpool import PagedKVPool, PoolExhausted
+from repro.serving.prefix_cache import PrefixCache
 from repro.serving.sampler import SamplerConfig, sample
 
 __all__ = [
     "Request", "ServingEngine", "TransformerExecutor", "GalaxyHMPExecutor",
-    "PagedKVPool", "PoolExhausted",
+    "PagedKVPool", "PoolExhausted", "PrefixCache",
     "make_cache", "cache_bytes", "SamplerConfig", "sample",
 ]

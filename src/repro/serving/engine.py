@@ -17,11 +17,33 @@ Two schedulers share one engine:
   protocol and as the correctness oracle: for greedy sampling the two
   schedulers produce identical tokens, which tests pin on both executors.
 
+Two continuous-scheduler extensions target prompt-heavy edge traffic:
+
+* **Shared-prefix KV cache** (``prefix_cache=True``): admission runs the
+  radix-tree lookup of :class:`~repro.serving.prefix_cache.PrefixCache`
+  over the prompt, attaches the hit's already-filled pages to the slot by
+  *refcount bump* (``PagedKVPool.admit(shared_pages=...)`` — no new
+  allocation, pages free only at refcount zero), and prefills **only the
+  uncached suffix** (the executor's ``prefill_chunk`` starts at the cached
+  offset and attends back to the shared pages).  After prefill the
+  request's own full prompt pages are inserted into the tree for later
+  requests; retirement decrements refcounts, and under memory pressure the
+  tree evicts idle LRU pages.  Decode needs no changes: reads are
+  block-table gathers, each slot writes only its own (never shared) tail
+  page.
+* **Chunked prefill** (``prefill_chunk=N``): instead of stalling every
+  live decode slot for a whole long-prompt prefill, admission queues a
+  prefill *task* and the main loop interleaves one N-token (grain-rounded)
+  chunk per iteration with the decode step, bounding time-to-first-token
+  jitter for already-decoding requests.  Chunks attend back to the pages
+  earlier chunks wrote, so the math equals the one-shot prefill.
+
 The engine is model-agnostic: it drives an *executor* exposing
 ``make_cache`` / ``prefill`` / ``decode`` (wave) and, optionally, the paged
 protocol ``supports_paged`` / ``make_pool`` / ``prefill_paged`` /
-``decode_paged`` plus the ``prompt_pad_multiple`` padding policy (1 for the
-single-device ``TransformerExecutor``; the mesh size for
+``decode_paged`` (plus ``prefill_chunk`` for the prefix/chunked paths) and
+the ``prompt_pad_multiple`` padding policy (1 for the single-device
+``TransformerExecutor``; the mesh size for
 ``serving.galaxy.GalaxyHMPExecutor``, whose SP prefill needs sequence
 multiples).  All shape-dependent functions are jitted once per shape bucket
 and reused.
@@ -43,6 +65,7 @@ from repro.models.sharding import Rules, axis_rules
 from repro.models.transformer import apply_model
 from repro.serving.kvcache import cache_page_size, make_cache, map_cache_leaves
 from repro.serving.kvpool import PagedKVPool
+from repro.serving.prefix_cache import PrefixCache
 from repro.serving.sampler import SamplerConfig, sample
 
 
@@ -57,6 +80,9 @@ class Request:
     # perf_counter stamp per emitted token (filled when the engine runs with
     # record_times=True; the microbench derives per-token latency from it)
     token_times: List[float] = dataclasses.field(default_factory=list)
+    # perf_counter stamp at submit() (record_times=True); TTFT per request
+    # is token_times[0] - submit_time (see benchmarks/run.py:ttft_percentiles)
+    submit_time: Optional[float] = None
 
 
 def _roundup(x: int, m: int) -> int:
@@ -177,6 +203,61 @@ class TransformerExecutor:
             self.params, tokens, pool, block_row, jnp.asarray(length, jnp.int32)
         )
 
+    def prefill_chunk(self, tokens, pool, block_row, *, offset, length):
+        """One chunked-prefill step (batch 1): gather the slot's pages into
+        a dense per-request cache view, run the chunk at absolute positions
+        [offset, offset + S) attending back to every already-written
+        position (earlier chunks and shared prefix pages), and scatter the
+        chunk's KV into its pages.  Returns ``(logits, pool)`` where the
+        logits row is the last *real* prompt token's — meaningful on the
+        chunk that covers position ``length - 1`` (the final one).
+        """
+        b, s = tokens.shape
+        if b != 1:
+            raise ValueError("paged prefill is per-request: batch must be 1")
+        key = ("chunk", s)
+        if key not in self._prefill_fns:
+            cfg, rules = self.cfg, self.rules
+
+            # offset/length stay traced scalars: one compiled program per
+            # chunk shape, shared by every offset it runs at
+            def prefill(params, tokens, pool, block_row, offset, length):
+                page_size = cache_page_size(pool)
+                w = block_row.shape[0]
+
+                def gather(leaf, _, grouped):
+                    if grouped:
+                        g = leaf[:, block_row]  # (G, W, page, kv, hd)
+                        return g.reshape(g.shape[0], 1, w * page_size,
+                                         *g.shape[3:])
+                    g = leaf[block_row]
+                    return g.reshape(1, w * page_size, *g.shape[2:])
+
+                dense = map_cache_leaves(pool, pool, gather)
+                with axis_rules(rules):
+                    logits, dense, _ = apply_model(
+                        params, cfg, tokens=tokens, mode="prefill",
+                        cache=dense, cache_index=offset,
+                    )
+                pos = offset + jnp.arange(s)
+                phys = block_row[pos // page_size]
+                within = pos % page_size
+
+                def scatter(leaf, new, grouped):
+                    if grouped:
+                        return leaf.at[:, phys, within].set(new[:, 0, pos])
+                    return leaf.at[phys, within].set(new[0, pos])
+
+                pool = map_cache_leaves(pool, dense, scatter)
+                idx = jnp.clip(length - 1 - offset, 0, s - 1)
+                return logits[:, idx], pool
+
+            self._prefill_fns[key] = jax.jit(prefill, donate_argnums=(2,))
+        return self._prefill_fns[key](
+            self.params, tokens, pool, block_row,
+            jnp.asarray(offset, jnp.int32), jnp.asarray(length, jnp.int32),
+        )
+
     def decode_paged(self, tokens, pool, block_table, positions):
         """One continuous-batching step: gather each slot's pages into a
         dense per-slot view, run the single-token model at per-slot depths,
@@ -228,6 +309,22 @@ class _Slot:
     limit: int        # min(max_new_tokens, max_len - prompt_len)
 
 
+@dataclasses.dataclass
+class _PrefillTask:
+    """An admitted request whose prompt is (still) being prefilled.
+
+    The pool pages are already reserved (and prefix-hit pages attached);
+    ``next_off`` is the first absolute position not yet written — it starts
+    at the cached prefix length and advances one chunk per step."""
+    req: Request
+    slot: int
+    tokens: np.ndarray  # (1, s_pad) bucket-padded prompt
+    s: int              # real prompt length
+    s_pad: int
+    limit: int
+    next_off: int
+
+
 class ServingEngine:
     def __init__(
         self,
@@ -244,6 +341,8 @@ class ServingEngine:
         page_size: int = 16,
         num_pages: Optional[int] = None,
         record_times: bool = False,
+        prefix_cache: bool = False,
+        prefill_chunk: Optional[int] = None,
     ):
         if executor is None:
             if params is None or cfg is None:
@@ -255,6 +354,14 @@ class ServingEngine:
             )
         if scheduler not in ("auto", "continuous", "wave"):
             raise ValueError(f"unknown scheduler {scheduler!r}")
+        if prefill_chunk is not None and prefill_chunk < 1:
+            raise ValueError("prefill_chunk must be >= 1 token")
+        if (prefix_cache or prefill_chunk) and not hasattr(
+                executor, "prefill_chunk"):
+            raise ValueError(
+                "prefix caching / chunked prefill need an executor with "
+                "the prefill_chunk protocol"
+            )
         self.executor = executor
         self.max_batch = max_batch
         self.max_len = max_len
@@ -264,12 +371,20 @@ class ServingEngine:
         self.page_size = page_size
         self.num_pages = num_pages
         self.record_times = record_times
+        self.prefix_cache = prefix_cache
+        self.prefill_chunk = prefill_chunk
         self.queue: deque = deque()
         self.stats = {"prefill_tokens": 0, "decode_steps": 0, "requests": 0,
-                      "decode_tokens": 0}
+                      "decode_tokens": 0, "prefill_chunks": 0,
+                      "prefix_hits": 0, "cached_prefix_tokens": 0,
+                      "peak_shared_pages": 0}
+        # post-run introspection (tests / benches / demos)
+        self.prefix_stats: Optional[Dict] = None
 
     # --- request intake ---------------------------------------------------
     def submit(self, req: Request):
+        if self.record_times:
+            req.submit_time = time.perf_counter()
         self.queue.append(req)
         self.stats["requests"] += 1
 
@@ -281,6 +396,11 @@ class ServingEngine:
                     if getattr(self.executor, "supports_paged", False) else "wave")
         if mode == "continuous":
             return self._run_continuous()
+        if self.prefix_cache or self.prefill_chunk:
+            raise ValueError(
+                "prefix caching / chunked prefill belong to the continuous "
+                "scheduler (the wave path has no paged pool to share)"
+            )
         return self._run_waves()
 
     # --- shared helpers ---------------------------------------------------
@@ -314,18 +434,64 @@ class ServingEngine:
         # prompts pad to lcm(executor multiple, page size): page-boundary
         # padding costs no extra pages (allocation is page-granular anyway)
         # and bounds the number of distinct prefill shapes — one compiled
-        # program per page count instead of one per prompt length
+        # program per page count instead of one per prompt length.  The
+        # same grain aligns prefix-cache hits and prefill chunks, so every
+        # suffix chunk starts on a compile-shape boundary.
         grain = math.lcm(self._pad_multiple, ps)
         pad_max = _roundup(self.max_len, grain)
         pages_per_slot = pad_max // ps
         total_pages = self.num_pages or (1 + n_slots * pages_per_slot)
         pool = PagedKVPool(total_pages, ps, n_slots, pages_per_slot)
         storage = ex.make_pool(total_pages, ps)
+        pcache = PrefixCache(pool, grain=grain) if self.prefix_cache else None
+        self.pool = pool  # introspection (tests / benches)
+        chunk_tokens = (None if self.prefill_chunk is None
+                        else _roundup(self.prefill_chunk, grain))
         slots: List[Optional[_Slot]] = [None] * n_slots
+        prefills: deque = deque()  # admitted slots still mid-prefill
         finished: List[Request] = []
 
-        def admit() -> None:
+        def prefill_step(t: _PrefillTask) -> bool:
+            """Advance one chunk; True when the prompt is fully prefilled.
+
+            The final chunk always covers position ``s - 1`` (chunk starts
+            are grain-aligned and ``s_pad - s < grain``), so its logits row
+            is the last real prompt token's — the first sampled token."""
             nonlocal storage
+            off = t.next_off
+            size = (t.s_pad - off if chunk_tokens is None
+                    else min(chunk_tokens, t.s_pad - off))
+            block_row = jnp.asarray(pool.block_table[t.slot])
+            chunk = jnp.asarray(t.tokens[:, off:off + size])
+            if off == 0 and size == t.s_pad:
+                # one-shot program (no context gather): the pre-chunking path
+                logits, storage = ex.prefill_paged(
+                    chunk, storage, block_row, length=t.s)
+            else:
+                logits, storage = ex.prefill_chunk(
+                    chunk, storage, block_row, offset=off, length=t.s)
+                self.stats["prefill_chunks"] += 1
+            # count *computed* prompt tokens: suffix-only under prefix hits
+            self.stats["prefill_tokens"] += max(0, min(t.s, off + size) - off)
+            t.next_off = off + size
+            if t.next_off < t.s_pad:
+                return False
+            if pcache is not None:
+                # publish this prompt's full pages for later admissions
+                # (the partial tail page stays slot-private); the refcount
+                # algebra is verified at sharing admissions and end of run
+                pcache.insert(t.req.prompt, pool.block_table[t.slot])
+            tok = int(np.asarray(self._sample(logits))[0])
+            if self._emit(t.req, tok, t.limit):
+                pool.retire(t.slot)
+                finished.append(t.req)
+            else:
+                slots[t.slot] = _Slot(t.req, tok, t.s, t.limit)
+            return True
+
+        def admit() -> None:
+            """Admission: prefix lookup -> shared-page refcount bump ->
+            suffix-only prefill (inline, or queued as chunk tasks)."""
             while self.queue:
                 slot = pool.free_slot()
                 if slot is None:
@@ -340,60 +506,97 @@ class ServingEngine:
                     continue
                 s_pad = _roundup(s, grain)
                 max_positions = max(s_pad, s + limit)
-                if not pool.can_admit(max_positions):
-                    return
+                shared: List[int] = []
+                cached = 0
+                if pcache is not None:
+                    shared, cached = pcache.lookup(r.prompt)
+                if not pool.can_admit(max_positions, shared=len(shared)):
+                    if pcache is not None:
+                        need = (pool.pages_for(max_positions) - len(shared)
+                                - pool.available)
+                        pcache.evict(need)
+                        # eviction may have pruned our own match: re-walk
+                        shared, cached = pcache.lookup(r.prompt)
+                    if not pool.can_admit(max_positions, shared=len(shared)):
+                        return
                 self.queue.popleft()
                 pool.admit(slot, initial_positions=s_pad,
-                           max_positions=max_positions)
+                           max_positions=max_positions, shared_pages=shared)
+                if shared:
+                    self.stats["prefix_hits"] += 1
+                    self.stats["cached_prefix_tokens"] += cached
+                    self.stats["peak_shared_pages"] = max(
+                        self.stats["peak_shared_pages"],
+                        pool.shared_page_count())
+                    pool.check()
                 tokens = np.zeros((1, s_pad), np.int32)
                 tokens[0, :s] = r.prompt
-                block_row = jnp.asarray(pool.block_table[slot])
-                logits, storage = ex.prefill_paged(
-                    jnp.asarray(tokens), storage, block_row, length=s
-                )
-                self.stats["prefill_tokens"] += s
-                tok = int(np.asarray(self._sample(logits))[0])
-                if self._emit(r, tok, limit):
-                    pool.retire(slot)
-                    finished.append(r)
+                task = _PrefillTask(r, slot, tokens, s, s_pad, limit,
+                                    next_off=cached)
+                if chunk_tokens is None:
+                    # no interleaving requested: prefill to completion now
+                    while not prefill_step(task):
+                        pass
                 else:
-                    slots[slot] = _Slot(r, tok, s, limit)
+                    prefills.append(task)
 
         admit()
-        while any(slots) or self.queue:
-            if not any(slots):
-                # nothing active and nothing admissible: the head request can
-                # never fit (pool smaller than one request)
+        while any(slots) or prefills or self.queue:
+            if not any(slots) and not prefills:
+                # nothing active and nothing admissible: drop the whole
+                # prefix tree (its pins may be what starves the head
+                # request) and retry before declaring the pool too small
+                if pcache is not None and len(pcache):
+                    pcache.evict(total_pages)
+                    admit()
+                    if any(slots) or prefills:
+                        continue
                 r = self.queue[0]
                 raise RuntimeError(
                     f"request uid={r.uid} (prompt {len(r.prompt)}, "
                     f"max_new {r.max_new_tokens}) cannot fit the pool of "
                     f"{total_pages} pages x {ps}"
                 )
+            if prefills:
+                # one chunk per iteration, interleaved with the decode step
+                # below: long prompts no longer stall live decode slots
+                if prefill_step(prefills[0]):
+                    prefills.popleft()
             live = [i for i, sl in enumerate(slots) if sl is not None]
-            tokens = np.zeros((n_slots, 1), np.int32)
-            positions = np.zeros(n_slots, np.int32)
-            for i in live:
-                pool.ensure(i, slots[i].next_index)
-                tokens[i, 0] = slots[i].last_token
-                positions[i] = slots[i].next_index
-            logits, storage = ex.decode_paged(
-                jnp.asarray(tokens), storage,
-                jnp.asarray(pool.block_table), jnp.asarray(positions),
-            )
-            self.stats["decode_steps"] += 1
-            self.stats["decode_tokens"] += len(live)
-            toks = np.asarray(self._sample(logits))
-            for i in live:
-                sl = slots[i]
-                if self._emit(sl.req, int(toks[i]), sl.limit):
-                    pool.retire(i)
-                    slots[i] = None
-                    finished.append(sl.req)
-                else:
-                    sl.last_token = int(toks[i])
-                    sl.next_index += 1
+            if live:
+                tokens = np.zeros((n_slots, 1), np.int32)
+                positions = np.zeros(n_slots, np.int32)
+                live_mask = np.zeros(n_slots, bool)
+                for i in live:
+                    pool.ensure(i, slots[i].next_index)
+                    tokens[i, 0] = slots[i].last_token
+                    positions[i] = slots[i].next_index
+                    live_mask[i] = True
+                # non-live rows (idle *or mid-prefill*) decode against the
+                # null page: their dummy write must not touch real pages
+                bt = np.where(live_mask[:, None], pool.block_table, 0)
+                logits, storage = ex.decode_paged(
+                    jnp.asarray(tokens), storage,
+                    jnp.asarray(bt), jnp.asarray(positions),
+                )
+                self.stats["decode_steps"] += 1
+                self.stats["decode_tokens"] += len(live)
+                toks = np.asarray(self._sample(logits))
+                for i in live:
+                    sl = slots[i]
+                    if self._emit(sl.req, int(toks[i]), sl.limit):
+                        pool.retire(i)
+                        slots[i] = None
+                        finished.append(sl.req)
+                    else:
+                        sl.last_token = int(toks[i])
+                        sl.next_index += 1
             admit()  # freed slots refill immediately — continuous batching
+        if pcache is not None:
+            pool.check()  # final refcount-algebra validation for the run
+            self.prefix_stats = pcache.stats()
+        else:
+            self.prefix_stats = None
         return finished
 
     # --- wave execution ------------------------------------------------------

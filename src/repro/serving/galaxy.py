@@ -13,6 +13,11 @@ against a pool of head-sharded KV pages (``hmp.make_paged_kv_cache``) —
 prefill scatters prompt KV straight into this request's pages, decode
 gathers each slot's pages through the block table *inside* the shard_map,
 so every device only ever touches its own head shard of the pool.
+``prefill_chunk`` extends the paged protocol for the engine's shared-prefix
+admission flow (lookup -> refcount bump -> suffix-only chunked prefill) and
+chunked prefill: a chunk starts at an arbitrary grain-aligned offset and
+attends back to the KV pages already holding the shared prefix and earlier
+chunks, so a prefix hit pays compute only for the uncached suffix.
 
 Sequence layout is plan-derived: prefill scatters the prompt into the
 plan's padded ragged layout (``ExecPlan.seq_layout`` — per-device sequence
@@ -139,6 +144,40 @@ class GalaxyHMPExecutor:
         return hmp.make_paged_kv_cache(
             num_pages, page_size, len(self.layers), self.mesh, self.plan,
             dtype=self.embed.dtype,
+        )
+
+    def prefill_chunk(self, tokens, pool, block_row, *, offset, length):
+        """One chunked-prefill step (batch 1): run a grain-aligned chunk of
+        the prompt at absolute positions [offset, offset + S) through the
+        Galaxy schedule, attending back to the pages already written by the
+        shared prefix and earlier chunks (``hmp_prefill_paged(offset=)``
+        gathers the block row as attention context inside the shard_map).
+        Returns ``(logits, pool)`` with the logits row at the last real
+        prompt token — meaningful on the chunk covering ``length - 1``."""
+        b, s = tokens.shape
+        key = ("chunk", s)
+        if key not in self._prefill_fns:
+            layout = self.plan.seq_layout(s)
+            mesh, plan, overlap = self.mesh, self.plan, self.overlap
+
+            # offset/length stay traced scalars: one compiled program per
+            # chunk shape, shared by every offset it runs at
+            def prefill(layers, embed, tokens, pool, block_row, offset, length):
+                tokens = layout.scatter(tokens)  # identity when dense
+                x = embed[tokens]  # (1, padded, d)
+                y, pool = hmp.hmp_prefill_paged(
+                    layers, x, mesh, pool, block_row, plan=plan,
+                    overlap=overlap, seq=s, offset=offset,
+                )
+                y = layout.gather(y)
+                idx = jnp.clip(length - 1 - offset, 0, s - 1)
+                logits = y[:, idx] @ embed.T
+                return logits, pool
+
+            self._prefill_fns[key] = jax.jit(prefill, donate_argnums=(3,))
+        return self._prefill_fns[key](
+            self.layers, self.embed, tokens, pool, block_row,
+            jnp.asarray(offset, jnp.int32), jnp.asarray(length, jnp.int32),
         )
 
     def prefill_paged(self, tokens, pool, block_row, length: int):

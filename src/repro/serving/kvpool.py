@@ -19,10 +19,20 @@ max_new_tokens), but pages are physically allocated lazily (prompt pages at
 admission, one page at a time as decode crosses page boundaries).  Freed
 pages return to the free list on retirement and are reused by later
 admissions.
+
+Pages are **refcounted** so prompt-prefix pages can be shared across
+requests (``serving/prefix_cache.py``): ``admit(shared_pages=...)`` attaches
+already-filled pages to the front of a slot's row and bumps their refcounts
+instead of allocating; ``retire`` decrements, and a page returns to the free
+list only when its refcount hits zero.  The prefix cache itself holds
+references through ``pin``/``unpin`` (a pinned page survives the retirement
+of every slot that used it, staying warm for future hits), and ``check()``
+validates the full refcount algebra: every page's refcount equals its
+block-table row occurrences across live slots plus its pin count.
 """
 from __future__ import annotations
 
-from typing import List, Optional
+from typing import List, Optional, Sequence
 
 import numpy as np
 
@@ -58,6 +68,9 @@ class PagedKVPool:
         self._allocated: List[List[int]] = [[] for _ in range(num_slots)]
         self._reserved = np.zeros(num_slots, np.int64)
         self.active = np.zeros(num_slots, bool)
+        # per-page reference counts: block-table occurrences + pins
+        self.refcount = np.zeros(num_pages, np.int64)
+        self._pins = np.zeros(num_pages, np.int64)
 
     # --- capacity -------------------------------------------------------------
     @property
@@ -81,42 +94,75 @@ class PagedKVPool:
         """Pages needed to hold ``positions`` KV entries."""
         return -(-positions // self.page_size)
 
-    def can_admit(self, max_positions: int) -> bool:
-        return (self.pages_for(max_positions) <= self.pages_per_slot
-                and self.pages_for(max_positions) <= self.available)
+    def can_admit(self, max_positions: int, shared: int = 0) -> bool:
+        """``shared`` prefix pages come from the prefix cache (already
+        filled), so only the remainder must be free or reservable."""
+        need = self.pages_for(max_positions)
+        return need <= self.pages_per_slot and need - shared <= self.available
 
     def free_slot(self) -> Optional[int]:
         idle = np.flatnonzero(~self.active)
         return int(idle[0]) if idle.size else None
 
     # --- lifecycle ------------------------------------------------------------
+    def _attach(self, slot: int, page: int) -> None:
+        row = self._allocated[slot]
+        self.block_table[slot, len(row)] = page
+        row.append(page)
+        self.refcount[page] += 1
+
     def _take_page(self, slot: int) -> int:
         if not self._free:
             raise PoolExhausted(f"slot {slot}: free list empty")
         page = self._free.pop()
-        row = self._allocated[slot]
-        self.block_table[slot, len(row)] = page
-        row.append(page)
+        self._attach(slot, page)
         return page
 
-    def admit(self, slot: int, initial_positions: int, max_positions: int) -> None:
-        """Reserve ``pages_for(max_positions)`` and allocate the prompt pages."""
+    def _release(self, page: int) -> bool:
+        """Drop one reference; returns True if the page was actually freed."""
+        if self.refcount[page] <= 0:
+            raise ValueError(f"page {page}: release below zero refcount")
+        self.refcount[page] -= 1
+        if self.refcount[page] == 0:
+            self._free.append(page)
+            return True
+        return False
+
+    def admit(self, slot: int, initial_positions: int, max_positions: int,
+              shared_pages: Sequence[int] = ()) -> None:
+        """Reserve ``pages_for(max_positions)`` and allocate the prompt pages.
+
+        ``shared_pages`` are prefix-cache hits: already-filled physical pages
+        that become this slot's leading logical pages.  They are attached by
+        refcount bump (no allocation), so admission only needs
+        ``pages_for(max_positions) - len(shared_pages)`` reservable pages.
+        """
         if self.active[slot]:
             raise ValueError(f"slot {slot} is already active")
         need = self.pages_for(max_positions)
+        k = len(shared_pages)
         if need > self.pages_per_slot:
             raise ValueError(
                 f"request needs {need} pages, block table holds {self.pages_per_slot}"
             )
-        if need > self.available:
-            raise PoolExhausted(
-                f"admission needs {need} pages, {self.available} available"
-            )
         if initial_positions > max_positions:
             raise ValueError("initial_positions exceeds max_positions")
+        if k > self.pages_for(initial_positions):
+            raise ValueError(
+                f"{k} shared prefix pages exceed the prompt's "
+                f"{self.pages_for(initial_positions)} pages"
+            )
+        if any(p == NULL_PAGE or self.refcount[p] <= 0 for p in shared_pages):
+            raise ValueError("shared pages must be live non-null pages")
+        if need - k > self.available:
+            raise PoolExhausted(
+                f"admission needs {need - k} new pages, {self.available} available"
+            )
         self.active[slot] = True
         self._reserved[slot] = need
-        for _ in range(self.pages_for(initial_positions)):
+        for page in shared_pages:
+            self._attach(slot, int(page))
+        for _ in range(self.pages_for(initial_positions) - k):
             self._take_page(slot)
 
     def ensure(self, slot: int, position: int) -> None:
@@ -132,31 +178,80 @@ class PagedKVPool:
             self._take_page(slot)
 
     def retire(self, slot: int) -> List[int]:
-        """Return the slot's pages to the free list; zero its row."""
+        """Drop the slot's page references; zero its row.  Returns the pages
+        the slot held — each goes back to the free list only if this was its
+        last reference (unshared pools: all of them, as before)."""
         if not self.active[slot]:
             raise ValueError(f"slot {slot} is not active")
         pages = self._allocated[slot]
-        self._free.extend(reversed(pages))
+        for page in reversed(pages):
+            self._release(page)
         self._allocated[slot] = []
         self._reserved[slot] = 0
         self.block_table[slot, :] = NULL_PAGE
         self.active[slot] = False
         return pages
 
-    # --- invariants (tests) ---------------------------------------------------
+    def shared_page_count(self) -> int:
+        """Physical pages currently referenced by two or more live slots."""
+        counts: dict = {}
+        for row in self._allocated:
+            for p in row:
+                counts[p] = counts.get(p, 0) + 1
+        return sum(1 for v in counts.values() if v >= 2)
+
+    # --- external references (prefix cache) -----------------------------------
+    def pin(self, page: int) -> None:
+        """Add an external (prefix-tree) reference to a live page."""
+        if page == NULL_PAGE:
+            raise ValueError("cannot pin the null page")
+        if self.refcount[page] <= 0:
+            raise ValueError(f"page {page}: pin of an unallocated page")
+        self.refcount[page] += 1
+        self._pins[page] += 1
+
+    def unpin(self, page: int) -> bool:
+        """Drop an external reference; returns True if the page was freed."""
+        if self._pins[page] <= 0:
+            raise ValueError(f"page {page}: unpin without a pin")
+        self._pins[page] -= 1
+        return self._release(page)
+
+    # --- invariants (tests / sharing admissions) ------------------------------
     def check(self) -> None:
-        """Assert no page is leaked, double-allocated, or null-aliased."""
-        held = [p for row in self._allocated for p in row]
-        assert NULL_PAGE not in held, "null page was allocated"
-        assert NULL_PAGE not in self._free, "null page on the free list"
-        seen = set(held)
-        assert len(seen) == len(held), "page double-allocated across slots"
-        assert not (seen & set(self._free)), "allocated page also on free list"
-        assert len(held) + len(self._free) == self.num_pages - 1, "page leak"
+        """Validate the refcount algebra: no page leaked, double-freed, or
+        null-aliased, and every refcount equals block-table occurrences
+        across live slots plus the prefix-tree pin count.  Raises
+        AssertionError explicitly (not via ``assert``) so the guard also
+        fires under ``python -O``."""
+        def ensure(cond, msg):
+            if not cond:
+                raise AssertionError(msg)
+
+        held: List[int] = [p for row in self._allocated for p in row]
+        ensure(NULL_PAGE not in held, "null page was allocated")
+        ensure(NULL_PAGE not in self._free, "null page on the free list")
+        ensure(len(set(self._free)) == len(self._free), "free-list duplicate")
+        occurrences = np.zeros(self.num_pages, np.int64)
+        for p in held:
+            occurrences[p] += 1
+        expect = occurrences + self._pins
+        ensure(np.array_equal(self.refcount, expect),
+               f"refcount desync: refcount={self.refcount.tolist()} != "
+               f"slots+pins={expect.tolist()}")
+        # the satellite invariant: total references == pages held by live
+        # slots (with multiplicity) + prefix-tree nodes
+        ensure(int(self.refcount.sum()) == len(held) + int(self._pins.sum()),
+               "refcount sum != slot holdings + tree pins")
+        for p in self._free:
+            ensure(self.refcount[p] == 0, f"page {p} free while referenced")
+        live = int(np.count_nonzero(self.refcount[1:]))
+        ensure(live + len(self._free) == self.num_pages - 1, "page leak")
         for s in range(self.num_slots):
             row = self.block_table[s]
             n = len(self._allocated[s])
-            assert list(row[:n]) == self._allocated[s], "block table desync"
-            assert np.all(row[n:] == NULL_PAGE), "stale block-table tail"
+            ensure(list(row[:n]) == self._allocated[s], "block table desync")
+            ensure(bool(np.all(row[n:] == NULL_PAGE)), "stale block-table tail")
             if not self.active[s]:
-                assert n == 0 and self._reserved[s] == 0, "idle slot holds pages"
+                ensure(n == 0 and self._reserved[s] == 0,
+                       "idle slot holds pages")

@@ -128,6 +128,24 @@ def test_to_planner_plan_fractions():
     assert np.all(ep.to_planner_plan(padded=True).mha == 6)
 
 
+def test_prefill_gemm_flops_prices_suffix_only():
+    """A prefix-cache hit shrinks per-shard prefill GEMM FLOPs to the
+    uncached suffix rows (GEMM cost is row-linear; the attention-core
+    context term is the simulator's job)."""
+    ep = ExecPlan.from_plan(_uneven_plan(), head_dim=2, d_model=32)
+    full = ep.prefill_gemm_flops(128)
+    half = ep.prefill_gemm_flops(128, cached_prefix=64)
+    np.testing.assert_allclose(half, full / 2)
+    np.testing.assert_array_equal(half, ep.device_gemm_flops(64))
+    # padded view scales the same way (every device at max(units))
+    np.testing.assert_allclose(
+        ep.prefill_gemm_flops(128, cached_prefix=64, padded=True),
+        ep.device_gemm_flops(128, padded=True) / 2)
+    for bad in (-1, 128, 200):
+        with pytest.raises(ValueError, match="cached_prefix"):
+            ep.prefill_gemm_flops(128, cached_prefix=bad)
+
+
 def _ragged_plan():
     """3:2:2:1 cluster with uneven heads, columns AND sequence tiles."""
     return ExecPlan(heads=(6, 4, 4, 2), columns=(24, 16, 16, 8), head_dim=2,
@@ -595,6 +613,72 @@ def test_uneven_seq_serving_acceptance():
         assert r_bw.latency < r_eq.latency, (r_bw.latency, r_eq.latency)
         print(f'sim: aware {r_bw.latency*1e3:.1f}ms < equal '
               f'{r_eq.latency*1e3:.1f}ms')
+    """, devices=4)
+
+
+def test_prefix_cache_serving_acceptance():
+    """ISSUE acceptance on the Galaxy executor: greedy tokens with the
+    shared-prefix KV cache on == cache off == chunked prefill ==
+    full-context reference, on both schedulers, under an uneven
+    (heads, columns, sequence) 3:2:2:1 4-device plan — with suffix-only
+    prefill measured (computed == prompt - cached), >= 1 physical page
+    shared across >= 2 concurrent slots, and the pool's refcount algebra
+    verified by ``check()``."""
+    run_multidevice("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.core import hmp
+        from repro.core.execplan import ExecPlan
+        from repro.launch.mesh import make_mesh_compat
+        from repro.serving import GalaxyHMPExecutor, Request, ServingEngine
+
+        ep = ExecPlan(heads=(6, 4, 4, 2), columns=(24, 16, 16, 8), head_dim=2,
+                      d_model=32, seq_shares=(3.0, 2.0, 2.0, 1.0))
+        mesh = make_mesh_compat((4,), ('model',))
+        vocab, n_layers = 50, 2
+        layers = hmp.init_stack_params(jax.random.PRNGKey(0), n_layers,
+                                       32, 16, 64)
+        emb = jax.random.normal(jax.random.PRNGKey(7), (vocab, 32)) * 0.5
+        exe = GalaxyHMPExecutor(layers, emb, ep, mesh, overlap=True)
+
+        sysp = list(range(1, 17))  # 16-token shared system prompt (2 pages)
+        prompts = [sysp + [20 + i, 21, 22 + i, 23] for i in range(4)]
+
+        def run(**kw):
+            eng = ServingEngine(executor=exe, max_batch=3, max_len=40,
+                                page_size=8, **kw)
+            for i, pr in enumerate(prompts):
+                eng.submit(Request(uid=i, prompt=list(pr),
+                                   max_new_tokens=3 + i))
+            return {r.uid: r.output for r in eng.run()}, eng
+
+        base, eng0 = run(scheduler='continuous')
+        wave, _ = run(scheduler='wave')
+        on, eng1 = run(scheduler='continuous', prefix_cache=True)
+        chunked, eng2 = run(scheduler='continuous', prefill_chunk=8)
+        both, eng3 = run(scheduler='continuous', prefix_cache=True,
+                         prefill_chunk=8)
+        assert wave == base and on == base, (wave, on, base)
+        assert chunked == base and both == base, (chunked, both, base)
+
+        s1 = eng1.stats
+        total_prompt = sum(len(p) for p in prompts)
+        assert s1['cached_prefix_tokens'] > 0
+        assert s1['prefill_tokens'] + s1['cached_prefix_tokens'] == total_prompt
+        assert s1['peak_shared_pages'] >= 1, s1
+        assert eng2.stats['prefill_chunks'] >= len(prompts)
+        eng1.pool.check()
+        print('suffix-only prefill:', s1['prefill_tokens'], 'of',
+              total_prompt, '| shared pages:', s1['peak_shared_pages'],
+              '| hits:', s1['prefix_hits'])
+
+        # full-context reference: plain stacked layers, no paging/sharing
+        for uid, pr in enumerate(prompts):
+            toks = list(pr)
+            for _ in range(3 + uid):
+                y = hmp.reference_stack(layers, emb[jnp.asarray([toks])])
+                toks.append(int(jnp.argmax(y[:, -1] @ emb.T, -1)[0]))
+            assert on[uid] == toks[len(pr):], (uid, on[uid], toks[len(pr):])
+        print('prefix cache on == off == chunked == wave == reference')
     """, devices=4)
 
 

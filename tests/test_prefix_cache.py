@@ -1,0 +1,348 @@
+"""Shared-prefix KV cache: refcounted pool algebra, radix-tree semantics
+(incl. the hypothesis leak/double-free property test), and engine-level
+greedy-token equality with the cache and chunked prefill on vs off."""
+import jax
+import numpy as np
+import pytest
+
+from repro.models import init_params
+from repro.serving import PagedKVPool, PrefixCache, Request, ServingEngine
+from repro.serving.kvpool import NULL_PAGE
+
+from helpers import smoke_cfg
+
+
+# --- refcounted pool ----------------------------------------------------------
+
+def test_shared_pages_free_only_at_refcount_zero():
+    pool = PagedKVPool(num_pages=12, page_size=4, num_slots=3, pages_per_slot=4)
+    pool.admit(0, initial_positions=8, max_positions=12)
+    shared = list(pool.block_table[0, :2])
+    pool.admit(1, initial_positions=8, max_positions=12, shared_pages=shared)
+    pool.check()
+    assert pool.shared_page_count() == 2
+    assert all(pool.refcount[p] == 2 for p in shared)
+    # slot 1 retires: shared pages stay allocated (slot 0 still reads them)
+    pool.retire(1)
+    pool.check()
+    assert all(pool.refcount[p] == 1 for p in shared)
+    assert pool.shared_page_count() == 0
+    pool.retire(0)
+    pool.check()
+    assert pool.free_pages == 11  # everything back
+
+
+def test_shared_admission_needs_fewer_new_pages():
+    pool = PagedKVPool(num_pages=6, page_size=4, num_slots=2, pages_per_slot=4)
+    pool.admit(0, initial_positions=16, max_positions=16)  # 4 of 5 pages
+    shared = list(pool.block_table[0, :3])
+    assert not pool.can_admit(16)  # cold: needs 4, 1 available
+    assert pool.can_admit(16, shared=3)  # warm: only the tail page is new
+    pool.admit(1, initial_positions=16, max_positions=16, shared_pages=shared)
+    pool.check()
+    with pytest.raises(ValueError, match="already active"):
+        pool.admit(1, 4, 4)
+    pool.retire(0)
+    pool.retire(1)
+    pool.check()
+
+
+def test_pin_keeps_page_alive_across_retire():
+    pool = PagedKVPool(num_pages=4, page_size=2, num_slots=1, pages_per_slot=3)
+    pool.admit(0, 4, 4)
+    page = int(pool.block_table[0, 0])
+    pool.pin(page)
+    pool.check()
+    pool.retire(0)
+    pool.check()
+    assert pool.refcount[page] == 1 and pool.free_pages == 2
+    assert pool.unpin(page)  # last reference -> freed
+    pool.check()
+    assert pool.free_pages == 3
+    with pytest.raises(ValueError):
+        pool.unpin(page)  # double-unpin is a bug, loudly
+
+
+def test_release_guards():
+    pool = PagedKVPool(num_pages=4, page_size=2, num_slots=2, pages_per_slot=2)
+    with pytest.raises(ValueError):
+        pool.pin(1)  # unallocated
+    pool.admit(0, 2, 2)
+    with pytest.raises(ValueError):
+        pool.admit(1, 2, 2, shared_pages=[NULL_PAGE])
+    with pytest.raises(ValueError):
+        pool.admit(1, 2, 4, shared_pages=list(pool.block_table[0, :1]) * 2)
+
+
+# --- radix tree ---------------------------------------------------------------
+
+def _pool(num_pages=32, page_size=4, num_slots=4, pages_per_slot=8):
+    return PagedKVPool(num_pages, page_size, num_slots, pages_per_slot)
+
+
+def test_lookup_is_page_aligned_and_proper():
+    pool = _pool()
+    pc = PrefixCache(pool)
+    prompt = list(range(10))  # 2 full pages + 2 tokens
+    pool.admit(0, 12, 12)
+    pc.insert(prompt, pool.block_table[0])
+    assert len(pc) == 2  # only the full pages entered the tree
+
+    # exact full-page prefix match
+    pages, cached = pc.lookup(list(range(8)) + [99])
+    assert cached == 8 and len(pages) == 2
+    # a prompt that *is* the cached prefix must keep its last token
+    # computable: the match is capped at len(prompt) - 1 and re-floored
+    pages, cached = pc.lookup(list(range(8)))
+    assert cached == 4 and len(pages) == 1
+    # diverging second page: only the first matches
+    pages, cached = pc.lookup([0, 1, 2, 3, 9, 9, 9, 9, 5])
+    assert cached == 4 and len(pages) == 1
+    # grain coarser than a page floors the match
+    pc8 = PrefixCache(_pool(), grain=8)
+    with pytest.raises(ValueError):
+        PrefixCache(_pool(), grain=6)  # not a page multiple
+    pool2 = pc8.pool
+    pool2.admit(0, 12, 12)
+    pc8.insert(prompt, pool2.block_table[0])
+    pages, cached = pc8.lookup(list(range(8)) + [99])
+    assert cached == 8 and len(pages) == 2
+    pages, cached = pc8.lookup([0, 1, 2, 3, 9, 9, 9, 9, 5])
+    assert cached == 0 and pages == []
+
+
+def test_insert_skips_existing_nodes():
+    pool = _pool()
+    pc = PrefixCache(pool)
+    prompt = list(range(8))
+    pool.admit(0, 8, 8)
+    assert pc.insert(prompt, pool.block_table[0]) == 2
+    first_pages = pc.held_pages()
+    # a second request with the same prefix keeps its private duplicates
+    # out of the tree (the first to finish wins)
+    pool.admit(1, 8, 8)
+    assert pc.insert(prompt, pool.block_table[1]) == 0
+    assert sorted(pc.held_pages()) == sorted(first_pages)
+    pool.check()
+
+
+def test_evict_lru_leaves_only_idle_pages():
+    pool = _pool(num_pages=16)
+    pc = PrefixCache(pool)
+    pool.admit(0, 16, 16)
+    pc.insert(list(range(16)), pool.block_table[0])
+    assert len(pc) == 4
+    # slot 0 still reads every page: nothing is evictable
+    assert pc.evict(10) == 0 and len(pc) == 4
+    pool.retire(0)
+    pool.check()
+    # now the tree is the only holder: eviction cascades leaf -> root
+    assert pc.evict(2) == 2 and len(pc) == 2
+    assert pc.evict(10) == 2 and len(pc) == 0
+    pool.check()
+    assert pool.free_pages == 15
+    assert pc.stats()["evicted_pages"] == 4
+
+
+def test_overlapping_prefixes_share_the_common_pages():
+    pool = _pool()
+    pc = PrefixCache(pool)
+    a = list(range(12))
+    b = list(range(8)) + [50, 51, 52, 53]  # shares 2 of 3 pages with a
+    pool.admit(0, 12, 12)
+    pc.insert(a, pool.block_table[0])
+    pages_b, cached_b = pc.lookup(b)
+    assert cached_b == 8
+    pool.admit(1, 12, 12, shared_pages=pages_b)
+    pc.insert(b, pool.block_table[1])
+    pool.check()
+    # tree: 3 nodes for a + 1 divergent third page for b
+    assert len(pc) == 4
+    pages_a2, cached_a2 = pc.lookup(a + [99])
+    assert cached_a2 == 12
+    assert pages_a2[:2] == pages_b[:2]
+
+
+# --- hypothesis: random overlapping admit/retire never leaks ------------------
+
+def test_random_prefix_lifecycle_never_leaks_or_double_frees():
+    hypothesis = pytest.importorskip("hypothesis")
+    st = pytest.importorskip("hypothesis.strategies")
+
+    @hypothesis.settings(max_examples=50, deadline=None)
+    @hypothesis.given(
+        ops=st.lists(
+            st.tuples(
+                st.sampled_from(["admit", "grow", "retire", "evict"]),
+                st.integers(0, 3),    # slot
+                st.integers(0, 2),    # base prompt family
+                st.integers(0, 20),   # length / position argument
+            ),
+            max_size=50,
+        ),
+        page_size=st.integers(1, 4),
+        num_pages=st.integers(4, 40),
+    )
+    def run(ops, page_size, num_pages):
+        pool = PagedKVPool(num_pages, page_size, num_slots=4, pages_per_slot=8)
+        pc = PrefixCache(pool)
+        bases = [[100 + f] * 32 for f in range(3)]  # overlapping families
+        live = {}
+        for op, slot, fam, arg in ops:
+            if op == "admit" and not pool.active[slot]:
+                # family prefix + a unique tail: prompts overlap page-wise
+                prompt = bases[fam][: max(arg, 1)] + [slot, fam, arg]
+                s = len(prompt)
+                s_pad = -(-s // page_size) * page_size
+                limit = 1 + arg % 3
+                maxp = s_pad + limit
+                if pool.pages_for(maxp) > pool.pages_per_slot:
+                    continue
+                pages, cached = pc.lookup(prompt)
+                if not pool.can_admit(maxp, shared=len(pages)):
+                    pc.evict(pool.pages_for(maxp) - len(pages)
+                             - pool.available)
+                    pages, cached = pc.lookup(prompt)
+                    if not pool.can_admit(maxp, shared=len(pages)):
+                        continue
+                pool.admit(slot, initial_positions=s_pad,
+                           max_positions=maxp, shared_pages=pages)
+                pc.insert(prompt, pool.block_table[slot])
+                live[slot] = (s, maxp)
+            elif op == "grow" and pool.active[slot]:
+                s, maxp = live[slot]
+                pool.ensure(slot, min(s + arg % 4, maxp - 1))
+            elif op == "retire" and pool.active[slot]:
+                pool.retire(slot)
+                live.pop(slot)
+            elif op == "evict":
+                pc.evict(arg)
+            pool.check()
+        for slot in list(live):
+            pool.retire(slot)
+            pool.check()
+        pc.clear()
+        pool.check()
+        assert pool.free_pages == num_pages - 1  # no leak, no double-free
+
+    run()
+
+
+# --- engine: cache on == cache off == chunked == wave == reference ------------
+
+_SYS = [7, 7, 7] + list(range(50, 79))  # 32 tokens: 4 pages at page_size 8
+
+
+def _requests():
+    rng = np.random.default_rng(0)
+    return [
+        Request(uid=i,
+                prompt=_SYS + [int(t) for t in rng.integers(1, 300, 5 + i)],
+                max_new_tokens=6 if i % 2 else 12)
+        for i in range(6)
+    ]
+
+
+def _run(params, cfg, **kw):
+    eng = ServingEngine(params, cfg, max_batch=3, max_len=64, page_size=8, **kw)
+    for r in _requests():
+        eng.submit(r)
+    done = eng.run()
+    assert all(r.done for r in done) and len(done) == 6
+    return {r.uid: r.output for r in done}, eng
+
+
+def test_prefix_cache_and_chunked_prefill_match_baseline():
+    """Greedy tokens: prefix cache on == off == chunked == both == wave,
+    with suffix-only prefill measured (computed == prompt - cached) and at
+    least one physical page shared across >=2 concurrent slots, refcounts
+    verified by ``PagedKVPool.check()`` at every sharing admission."""
+    cfg = smoke_cfg("qwen1.5-0.5b")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+
+    base, eng0 = _run(params, cfg, scheduler="continuous")
+    wave, _ = _run(params, cfg, scheduler="wave")
+    on, eng1 = _run(params, cfg, scheduler="continuous", prefix_cache=True)
+    chunked, eng2 = _run(params, cfg, scheduler="continuous", prefill_chunk=8)
+    both, eng3 = _run(params, cfg, scheduler="continuous", prefix_cache=True,
+                      prefill_chunk=8)
+    assert wave == base
+    assert on == base
+    assert chunked == base
+    assert both == base
+
+    # suffix-only prefill: computed tokens == prompt tokens - cached tokens
+    total_prompt = sum(len(r.prompt) for r in _requests())
+    s1 = eng1.stats
+    assert s1["cached_prefix_tokens"] > 0
+    assert s1["prefill_tokens"] + s1["cached_prefix_tokens"] == total_prompt
+    assert eng0.stats["prefill_tokens"] == total_prompt
+    # >= 1 physical page shared across >= 2 concurrent slots
+    assert s1["peak_shared_pages"] >= 1
+    assert s1["prefix_hits"] >= 1
+    eng1.pool.check()
+    # chunked prefill actually chunked
+    assert eng2.stats["prefill_chunks"] > len(_requests())
+    assert eng3.stats["prefill_chunks"] > 0
+    # hit-rate stats surface through the engine
+    assert eng1.prefix_stats is not None
+    assert eng1.prefix_stats["hits"] >= 1
+
+
+def test_prefix_cache_matches_full_context_reference():
+    """Cache-on greedy tokens equal a manual full-context prefill+decode
+    (no paging, no sharing) for a prefix-hitting request."""
+    import jax.numpy as jnp
+
+    from repro.models import apply_model
+    from repro.serving import make_cache
+
+    cfg = smoke_cfg("qwen1.5-0.5b")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    warm = Request(uid=0, prompt=_SYS + [1, 2, 3], max_new_tokens=4)
+    hit = Request(uid=1, prompt=_SYS + [9, 8, 7, 6], max_new_tokens=5)
+
+    eng = ServingEngine(params, cfg, max_batch=1, max_len=64, page_size=8,
+                        scheduler="continuous", prefix_cache=True)
+    eng.submit(warm)
+    eng.submit(hit)
+    done = {r.uid: r.output for r in eng.run()}
+    assert eng.stats["prefix_hits"] >= 1  # the second request hit
+
+    for req in (warm, hit):
+        prompt = req.prompt
+        toks = jnp.asarray([prompt], jnp.int32)
+        cache = make_cache(cfg, 1, len(prompt) + req.max_new_tokens)
+        logits, cache, _ = apply_model(params, cfg, mode="prefill",
+                                       cache=cache, tokens=toks)
+        out = []
+        last = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)
+        for t in range(req.max_new_tokens):
+            out.append(int(last[0]))
+            if t == req.max_new_tokens - 1:
+                break
+            idx = jnp.int32(len(prompt) + t)
+            logits, cache, _ = apply_model(
+                params, cfg, mode="decode", cache=cache, cache_index=idx,
+                positions=jnp.full((1, 1), idx, jnp.int32),
+                tokens=last[:, None],
+            )
+            last = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)
+        assert done[req.uid] == out, req.uid
+
+
+def test_prefix_flags_need_capable_executor_and_scheduler():
+    cfg = smoke_cfg("qwen1.5-0.5b")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    eng = ServingEngine(params, cfg, scheduler="wave", prefix_cache=True)
+    eng.submit(Request(uid=0, prompt=[1, 2, 3], max_new_tokens=2))
+    with pytest.raises(ValueError, match="continuous"):
+        eng.run()
+    with pytest.raises(ValueError, match="prefill_chunk"):
+        ServingEngine(params, cfg, prefill_chunk=0)
+
+    class NoChunk:
+        supports_paged = True
+
+    with pytest.raises(ValueError, match="prefill_chunk"):
+        ServingEngine(executor=NoChunk(), prefix_cache=True)

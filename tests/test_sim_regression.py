@@ -97,6 +97,12 @@ def _score(eplan, cfg, devices, link, seq):
         "padshed_us": simulate_execplan(
             eplan.with_backend("pallas"), cfg, devices, link, seq,
             overlap=True, padded=True).latency * 1e6,
+        # suffix-only prefill after a shared-prefix KV-cache hit covering
+        # half the prompt: GEMMs/transport run over seq/2 rows, the
+        # attention core reads the full seq keys from shared pages
+        "prefix_hit_us": simulate_execplan(
+            eplan, cfg, devices, link, seq, overlap=True,
+            cached_prefix=seq // 2).latency * 1e6,
     }
 
 
