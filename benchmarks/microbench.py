@@ -48,7 +48,9 @@ mesh = make_mesh_compat(({devices},), ('model',))
 eplan = ExecPlan(heads={tuple(eplan.heads)}, columns={tuple(eplan.columns)},
                  head_dim={eplan.head_dim}, d_model={eplan.d_model},
                  seq_shares={tuple(eplan.seq_shares)},
-                 compute_backend={eplan.compute_backend!r})
+                 compute_backend={eplan.compute_backend!r},
+                 transport={eplan.transport!r},
+                 double_buffer={eplan.double_buffer})
 p = hmp.init_layer_params(jax.random.PRNGKey(0), eplan.d_model,
                           eplan.num_heads, eplan.d_ff)
 pp = eplan.pad_layer_params(p)
@@ -270,6 +272,151 @@ def execplan_raggedsp() -> Iterator[Row]:
                f"padded rows per device={ep_aware.seq_tile(seq)}")
 
 
+def execplan_overlap() -> Iterator[Row]:
+    """Tile-granular overlap transports on an emulated slow-link cluster:
+    padded vs bucketed vs bucketed + double-buffered ring exchanges.
+
+    Same 3:2:2:1 DistilBert cluster as ``execplan_raggedsp`` with one
+    100 Mbps link: the bandwidth-aware ragged plan runs ``hmp_ring`` for
+    real on 4 forced CPU devices under all three transports, and the
+    subprocess asserts the transports are *bitwise*-identical to each
+    other and allclose to the unoverlapped sync schedule.  Forced host
+    devices share one memory bus, so the wire cannot be throttled
+    in-process; each variant's end-to-end latency is therefore *emulated*
+    as measured compute wall + the cost model's wire time for the rows
+    that transport actually ships (4 ring rotations per layer through
+    ``costmodel.t_ring_exchange`` over the skewed links).  Double
+    buffering issues the exchange before the GEMM that hides it, so its
+    wire contributes only the overhang ``max(0, wire - wall)``.
+
+    Gates (raise, not assert — they must also gate under -O):
+
+    1. The bucketed schedule ships strictly fewer rows per rotation than
+       padded transport on this plan (``RingSchedule.total_wire_rows``).
+    2. Emulated bucketed+db latency lands closer to the simulator's
+       ``sim/raggedsp_bandwidth_aware`` target than emulated padded
+       transport does — the overlap transport closes the gap between the
+       padded SPMD emulation and the plan the simulator priced.
+    """
+    import dataclasses
+
+    from repro.configs import get_config
+    from repro.core import costmodel
+    from repro.core.execplan import ExecPlan
+    from repro.core.profiler import AnalyticProfiler
+    from repro.core.simulator import simulate_execplan
+
+    seq = 128
+    cfg = dataclasses.replace(get_config("distilbert"), num_layers=1)
+    caps = [3.0, 2.0, 2.0, 1.0]
+    devices = [
+        costmodel.DeviceSpec(f"edge{i}", flops=c * 7.1e9, mem_bw=4.0e9,
+                             memory_budget=1.5e9)
+        for i, c in enumerate(caps)
+    ]
+    links = [costmodel.mbps(1000), costmodel.mbps(1000),
+             costmodel.mbps(100), costmodel.mbps(1000)]
+    prof = AnalyticProfiler(cfg, seq)
+    ep = ExecPlan.from_plan(prof.plan(devices, links=links),
+                            head_dim=cfg.head_dim, d_model=cfg.d_model)
+    variants = {
+        "padded": ep,
+        "bucketed": ep.with_transport("bucketed"),
+        "bucketed_db": ep.with_transport("bucketed", double_buffer=True),
+    }
+
+    # measured compute walls; outputs checked inside the subprocess
+    code = rf"""
+import jax, jax.numpy as jnp, numpy as np, time
+from repro.core import hmp
+from repro.core.execplan import ExecPlan
+from repro.launch.mesh import make_mesh_compat
+mesh = make_mesh_compat((4,), ('model',))
+base = ExecPlan(heads={tuple(ep.heads)}, columns={tuple(ep.columns)},
+                head_dim={ep.head_dim}, d_model={ep.d_model},
+                seq_shares={tuple(ep.seq_shares)})
+seq = {seq}
+p = hmp.init_layer_params(jax.random.PRNGKey(0), base.d_model,
+                          base.num_heads, base.d_ff)
+pp = base.pad_layer_params(p)
+x = jax.random.normal(jax.random.PRNGKey(1), (1, seq, base.d_model))
+xp = base.seq_layout(seq).scatter(x)
+outs = {{}}
+sync = hmp.hmp_layer(pp, xp, mesh, overlap=False, plan=base, seq=seq)
+for name, transport, db in [('padded', 'padded', False),
+                            ('bucketed', 'bucketed', False),
+                            ('bucketed_db', 'bucketed', True)]:
+    ep = base.with_transport(transport, double_buffer=db)
+    f = jax.jit(lambda p, x, e=ep: hmp.hmp_layer(p, x, mesh, overlap=True,
+                                                 plan=e, seq=seq))
+    y = f(pp, xp); jax.block_until_ready(y)
+    t0 = time.perf_counter()
+    for _ in range(10):
+        y = f(pp, xp)
+    jax.block_until_ready(y)
+    outs[name] = np.asarray(y)
+    print(f"wall_{{name}},{{(time.perf_counter()-t0)/10:.9f}}")
+err = np.abs(outs['padded'] - np.asarray(sync)).max()
+if err >= 1e-4:
+    raise RuntimeError(f"ring vs sync max err {{err:.3e}}")
+for name in ('bucketed', 'bucketed_db'):
+    if not np.array_equal(outs[name], outs['padded']):
+        raise RuntimeError(f"{{name}} transport is not bitwise-equal to padded")
+print(f"err_sync,{{err:.3e}}")
+"""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    proc = subprocess.run([sys.executable, "-c", code], env=env,
+                          capture_output=True, text=True, timeout=600)
+    if proc.returncode != 0:
+        raise RuntimeError(f"overlap subprocess failed:\n{proc.stderr[-2000:]}")
+    rows = dict(ln.split(",") for ln in proc.stdout.strip().splitlines())
+
+    # modeled wire time of what each transport actually ships: 4 ring
+    # rotations per layer (qkv/w1 allgather + wo/w2 reduce-scatter)
+    row_bytes = cfg.d_model * costmodel.BYTES_ACT
+    wire = {}
+    for name, plan in variants.items():
+        sched = plan.ring_schedule(seq)
+        wire[name] = 4 * costmodel.t_ring_exchange(
+            [int(b) * row_bytes for b in sched.buckets], links)
+    sched_b = variants["bucketed"].ring_schedule(seq)
+    if not sched_b.total_wire_rows() < sched_b.padded_wire_rows():
+        raise RuntimeError(
+            f"bucketed transport sheds nothing: ships "
+            f"{sched_b.total_wire_rows()} of {sched_b.padded_wire_rows()} rows"
+        )
+
+    target = simulate_execplan(ep, cfg, devices, links, seq,
+                               overlap=True).latency
+    emulated = {}
+    for name in variants:
+        wall = float(rows[f"wall_{name}"])
+        hidden = wall if name == "bucketed_db" else 0.0
+        emulated[name] = wall + max(0.0, wire[name] - hidden)
+    if not (abs(emulated["bucketed_db"] - target)
+            < abs(emulated["padded"] - target)):
+        raise RuntimeError(
+            f"overlap transport does not close the gap to the simulator: "
+            f"db={emulated['bucketed_db'] * 1e6:.0f}us "
+            f"padded={emulated['padded'] * 1e6:.0f}us "
+            f"target={target * 1e6:.0f}us"
+        )
+
+    yield ("sim/overlap_target", target * 1e6,
+           "simulated,sim/raggedsp_bandwidth_aware (exact-bytes wire)")
+    for name, plan in variants.items():
+        sched = plan.ring_schedule(seq)
+        yield (f"micro/overlap_{name}", emulated[name] * 1e6,
+               f"emulated=wall+wire,wall={float(rows[f'wall_{name}']) * 1e6:.0f}us,"
+               f"wire={wire[name] * 1e6:.0f}us,"
+               f"wire_rows={sched.total_wire_rows()}/{sched.padded_wire_rows()},"
+               f"bitwise-equal to padded")
+    yield ("micro/overlap_err_sync", float(rows["err_sync"]),
+           "ring vs unoverlapped sync schedule (atol 1e-4 gate)")
+
+
 def execplan_padshed() -> Iterator[Row]:
     """Pad shedding: the pallas valid-length backend vs the padded-XLA
     oracle on the 3:2:2:1 uneven DistilBert plan.
@@ -414,11 +561,11 @@ for name in ('xla', 'pallas'):
                                    overlap=True, seq=seq)
     pages = hmp.make_paged_kv_cache(6, page, 1, mesh, b)
     row = jnp.arange(1, 6, dtype=jnp.int32)
-    y_pp, pages = hmp.hmp_prefill_paged(layers, x, mesh, pages, row,
-                                        plan=b, overlap=True, seq=seq)
-    y_dec, pages = hmp.hmp_decode_paged(layers, x_new, mesh, pages,
-                                        row[None], jnp.asarray([seq]),
-                                        plan=b)
+    y_pp, pages = hmp.hmp_prefill(layers, x, mesh, pages, plan=b,
+                                  overlap=True, seq=seq, block_row=row)
+    y_dec, pages = hmp.hmp_decode(layers, x_new, mesh, pages,
+                                  jnp.asarray([seq]), plan=b,
+                                  block_table=row[None])
     outs[name] = (np.asarray(y), np.asarray(y_pre), np.asarray(y_dec))
     print(f"wall_{{name}},{{wall:.9f}}")
 for i, path in enumerate(('layer', 'prefill', 'decode_paged')):
@@ -670,5 +817,5 @@ print(f"page_bytes,{ep.kv_page_bytes(8)},{ep.describe()}")
 
 ALL = [kernel_fusion, flash_vs_naive, profiler_blocks,
        hmp_schedules_multidevice, execplan_uneven, execplan_raggedsp,
-       execplan_padshed, continuous_vs_wave, continuous_vs_wave_galaxy,
-       prefix_sharing]
+       execplan_overlap, execplan_padshed, continuous_vs_wave,
+       continuous_vs_wave_galaxy, prefix_sharing]

@@ -35,6 +35,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import planner
+from repro.core.ring import BUCKETS_PER_TILE, RING_TRANSPORTS, RingSchedule
 
 # which axis of each layer parameter is partitioned, and by which unit kind;
 # the PartitionSpecs themselves live in hmp.layer_param_specs (identical for
@@ -162,6 +163,11 @@ class ExecPlan:
                 use; materialized per sequence length by ``seq_layout``.
     compute_backend: which per-shard compute path the executor runs
                 (``COMPUTE_BACKENDS``); "pallas" sheds pad-block work.
+    transport:  ring wire format (``ring.RING_TRANSPORTS``): "padded" ships
+                whole ``max(tiles)``-row tiles per hop, "bucketed" ships
+                bucket-rounded ~valid rows (``RingSchedule.ragged``).
+    double_buffer: issue each ring hop before the GEMM that frees its
+                buffer (explicit tile-level overlap, ``core/ring.py``).
     """
 
     heads: Tuple[int, ...]
@@ -170,12 +176,19 @@ class ExecPlan:
     d_model: int
     seq_shares: Tuple[float, ...] = ()
     compute_backend: str = "xla"
+    transport: str = "padded"
+    double_buffer: bool = False
 
     def __post_init__(self):
         if self.compute_backend not in COMPUTE_BACKENDS:
             raise ValueError(
                 f"unknown compute_backend {self.compute_backend!r}; "
                 f"one of {COMPUTE_BACKENDS}"
+            )
+        if self.transport not in RING_TRANSPORTS:
+            raise ValueError(
+                f"unknown transport {self.transport!r}; "
+                f"one of {RING_TRANSPORTS}"
             )
         if len(self.heads) != len(self.columns):
             raise ValueError(
@@ -215,6 +228,16 @@ class ExecPlan:
     def with_backend(self, compute_backend: str) -> "ExecPlan":
         """The same plan routed through another per-shard compute path."""
         return dataclasses.replace(self, compute_backend=compute_backend)
+
+    def with_transport(self, transport: str = None, *,
+                       double_buffer: bool = None) -> "ExecPlan":
+        """The same plan with a different ring wire format / overlap mode."""
+        return dataclasses.replace(
+            self,
+            transport=self.transport if transport is None else transport,
+            double_buffer=(self.double_buffer if double_buffer is None
+                           else double_buffer),
+        )
 
     @classmethod
     def even(cls, n: int, *, num_heads: int, d_ff: int, head_dim: int,
@@ -298,6 +321,37 @@ class ExecPlan:
         no longer needs any padding — ``seq_layout`` covers every length —
         so this only bounds the number of distinct compiled prefill shapes."""
         return self.num_devices
+
+    # --- ring transport (what the hops ship) ----------------------------------
+    def ring_schedule(self, seq: int = None, *, layout: SeqLayout = None,
+                      gemm=None) -> RingSchedule:
+        """The ring program this plan's hops run for one sequence.
+
+        Solved ahead of trace time from ``seq_shares``: tile geometry from
+        ``seq_layout``, wire format and overlap mode from the plan's
+        ``transport`` / ``double_buffer`` knobs."""
+        if layout is None:
+            if seq is None:
+                raise ValueError("ring_schedule needs seq= or layout=")
+            layout = self.seq_layout(seq)
+        return RingSchedule.ragged(
+            layout.tiles, pad_tile=layout.pad_tile, transport=self.transport,
+            double_buffer=self.double_buffer, gemm=gemm,
+        )
+
+    def wire_fractions(self) -> np.ndarray:
+        """(D,) fraction of the logical sequence each device's hop ships, in
+        the large-seq limit (tiles -> shares).  Padded transport always
+        ships the straggler's ``max(fraction)`` tile; bucketed transport
+        ships each tile rounded up to the ``BUCKETS_PER_TILE`` grain —
+        the same rounding ``RingSchedule.ragged`` applies to integer
+        tiles."""
+        f = self.seq_fractions
+        top = float(f.max())
+        if self.transport != "bucketed":
+            return np.full(self.num_devices, top)
+        grain = top / BUCKETS_PER_TILE
+        return np.minimum(top, np.ceil(f / grain - 1e-9) * grain)
 
     # --- masks ----------------------------------------------------------------
     def head_mask(self) -> np.ndarray:
@@ -411,9 +465,12 @@ class ExecPlan:
         cols = np.asarray(self.columns) if dense else np.full(n, self.pad_columns)
         frac = self.seq_fractions
         seq = np.full(n, float(frac.max())) if padded else frac
+        # bucketed transport ships bucket-rounded rows regardless of the
+        # compute view; padded transport prices whatever ``seq`` carries
+        wire = self.wire_fractions() if self.transport == "bucketed" else None
         return planner.Plan(
             mha=heads.astype(int), mlp=cols.astype(int),
-            seq=seq, feasible=True,
+            seq=seq, feasible=True, seq_wire=wire,
         )
 
     def device_gemm_flops(self, seq: int = 1, padded: bool = False) -> np.ndarray:
@@ -465,12 +522,17 @@ class ExecPlan:
         eff = self.device_gemm_flops()
         pad = self.device_gemm_flops(padded=True)
         flops = ",".join(f"{e / p:.0%}" for e, p in zip(eff, pad))
+        transport = self.transport + ("+db" if self.double_buffer else "")
+        if self.transport == "bucketed":
+            top = float(self.seq_fractions.max())
+            shipped = self.wire_fractions().sum() / (self.num_devices * top)
+            transport += f" (wire={shipped:.0%})"
         return (
             f"ExecPlan(n={self.num_devices}, heads={list(self.heads)}"
             f"->pad {self.pad_heads}, columns={list(self.columns)}"
             f"->pad {self.pad_columns}, {seq}, waste="
             f"{self.padding_waste():.1%}, eff/pad flops=[{flops}], "
-            f"backend={self.compute_backend})"
+            f"backend={self.compute_backend}, transport={transport})"
         )
 
     def padding_waste(self) -> float:

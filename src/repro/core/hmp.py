@@ -48,11 +48,25 @@ Serving path: ``hmp_prefill`` / ``hmp_decode`` run a *stack* of layers
 through the Galaxy schedule against a head-sharded KV cache — prefill is
 the full TP/SP + ring program; decode is the single-token degenerate case
 (pure TP with an AllReduce; an SP split of one token is meaningless), which
-is what ``serving/galaxy.py`` drives from the wave scheduler.  The paged
-variants back continuous batching, and ``hmp_prefill_paged(offset=)`` is
-the chunked/suffix-only entry point: a chunk starting at an absolute offset
-attends back to the KV pages already written by a shared prompt prefix
-(``serving/prefix_cache.py``) and earlier chunks.
+is what ``serving/galaxy.py`` drives from the wave scheduler.  One
+keyword-normalized entry family covers every cache kind: ``seq=``,
+``plan=``, the cache kind (dense, or paged via ``block_row=`` /
+``block_table=``), and ``offset=`` compose orthogonally.
+``hmp_prefill(..., block_row=)`` writes straight into pool pages
+(continuous batching); adding ``offset=`` makes it the chunked/suffix-only
+entry point — a chunk starting at an absolute offset attends back to the
+KV pages already written by a shared prompt prefix
+(``serving/prefix_cache.py``) and earlier chunks.  ``hmp_decode(...,
+block_table=)`` is the paged slot-batch decode step.  The old
+``hmp_prefill_paged`` / ``hmp_decode_paged`` names remain as deprecation
+shims for one release.
+
+The ring side of every prefill runs a ``ring.RingSchedule`` built from the
+plan (``ExecPlan.ring_schedule``): the plan's ``transport`` /
+``double_buffer`` knobs select padded vs bucketed ragged transport and
+explicit tile-level double buffering without touching this module's code
+paths — the default padded single-buffer schedule keeps the exact
+pre-schedule XLA graphs.
 
 The production models use the GSPMD expression of the same layout
 (models/sharding.py); this module is the paper-exact schedule used for
@@ -61,6 +75,7 @@ equivalence tests, benchmarks, and as the template for the perf work.
 from __future__ import annotations
 
 import functools
+import warnings
 from typing import Dict, List, Optional, Sequence
 
 import jax
@@ -71,6 +86,7 @@ from jax.experimental.shard_map import shard_map
 
 from repro.core.execplan import ExecPlan, SeqLayout
 from repro.core.ring import (
+    RingSchedule,
     matmul_ring_reducescatter,
     ring_allgather_matmul,
     sync_allgather_matmul,
@@ -292,8 +308,22 @@ def _hmp_layer_local(p, x_loc, *, overlap: bool, return_kv: bool = False,
     d_model = x_loc.shape[-1]
     s_loc = x_loc.shape[1]
     h_loc, hd = p["wq"].shape[1], p["wq"].shape[2]
-    valid_sizes = None if layout is None else layout.tiles
     n_dev = plan.num_devices if plan is not None else None
+    # the ring program (tile geometry, wire format, overlap mode) is solved
+    # ahead of trace time from the plan; without a plan the primitives build
+    # their own dense even-split schedule from the shard shapes
+    if plan is None:
+        base_sched = None
+    elif layout is not None:
+        base_sched = plan.ring_schedule(layout=layout)
+    else:
+        base_sched = RingSchedule.dense(
+            n_dev, s_loc, transport=plan.transport,
+            double_buffer=plan.double_buffer)
+
+    def _sched(gemm_fn):
+        return None if base_sched is None else base_sched.with_gemm(gemm_fn)
+
     compute = _make_compute(backend, plan, layout,
                             None if n_dev is None else n_dev * s_loc)
     # the O(padded_len^2) ragged mask feeds only the xla attention path;
@@ -305,8 +335,8 @@ def _hmp_layer_local(p, x_loc, *, overlap: bool, return_kv: bool = False,
     wqkv = jnp.concatenate(
         [p["wq"].reshape(d_model, -1), p["wk"].reshape(d_model, -1),
          p["wv"].reshape(d_model, -1)], axis=1)
-    qkv = ag_mm(x_loc, wqkv, AXIS, tile_size=s_loc, valid_sizes=valid_sizes,
-                gemm=compute.qkv_gemm if compute else None)  # AllGather ⊗ GEMM1
+    qkv = ag_mm(x_loc, wqkv, AXIS,
+                schedule=_sched(compute.qkv_gemm if compute else None))  # AllGather ⊗ GEMM1
     q, k, v = jnp.split(qkv, 3, axis=-1)
     shape = (*q.shape[:2], h_loc, hd)
     k, v = k.reshape(shape), v.reshape(shape)
@@ -317,9 +347,8 @@ def _hmp_layer_local(p, x_loc, *, overlap: bool, return_kv: bool = False,
     else:
         attn = _attention(q.reshape(shape), k, v, mask=attn_mask)
     attn = attn.reshape(*q.shape[:2], h_loc * hd)
-    g_loc = mm_rs(attn, p["wo"].reshape(-1, d_model), AXIS, tile_size=s_loc,
-                  valid_sizes=valid_sizes,
-                  gemm=compute.wo_gemm if compute else None)  # GEMM ⊗ ReduceScatter
+    g_loc = mm_rs(attn, p["wo"].reshape(-1, d_model), AXIS,
+                  schedule=_sched(compute.wo_gemm if compute else None))  # GEMM ⊗ ReduceScatter
 
     # ---- connective block (SP over local sequence shard) ----
     if compute is not None:
@@ -328,11 +357,11 @@ def _hmp_layer_local(p, x_loc, *, overlap: bool, return_kv: bool = False,
         y_loc = _ln(x_loc + g_loc, p["ln1_s"], p["ln1_b"])
 
     # ---- MLP block (TP over columns) ----
-    h = ag_mm(y_loc, p["w1"], AXIS, tile_size=s_loc, valid_sizes=valid_sizes,
-              gemm=compute.w1_gemm if compute else None)
+    h = ag_mm(y_loc, p["w1"], AXIS,
+              schedule=_sched(compute.w1_gemm if compute else None))
     h = jax.nn.gelu(h)
-    f_loc = mm_rs(h, p["w2"], AXIS, tile_size=s_loc, valid_sizes=valid_sizes,
-                  gemm=compute.w2_gemm if compute else None)
+    f_loc = mm_rs(h, p["w2"], AXIS,
+                  schedule=_sched(compute.w2_gemm if compute else None))
 
     # ---- connective block ----
     if compute is not None:
@@ -435,18 +464,51 @@ def _prefill_layer_local(p, x_loc, ck, cv, *, overlap: bool,
     return y_loc, ck, cv
 
 
+_DEPRECATED_PAGED_NOTE = (
+    "{old} is deprecated and will be removed in the next release; "
+    "use {new} — the unified entry family composes seq=, plan=, the cache "
+    "kind and offset= orthogonally"
+)
+
+
 def hmp_prefill(layers: Sequence[Dict], x, mesh: Mesh, cache: List[Dict],
                 *, plan: ExecPlan, overlap: bool = False,
-                seq: Optional[int] = None):
+                seq: Optional[int] = None, block_row=None, offset=None):
     """Run a stack of HMP layers over a prompt, filling the KV cache.
 
-    x: (B, S, d) — for a dense layout the plain prompt (pad to a dividing
-    length if desired; causal masking keeps real positions exact); for a
-    ragged plan the padded ragged layout of a ``seq``-row prompt
-    (``plan.seq_layout(seq).scatter``).  K/V land in the cache at absolute
-    positions either way.  Returns (y, cache) with y in the same layout
-    as x.
+    One keyword-normalized prefill entry point; the orthogonal knobs are
+
+    * ``seq=``     — logical prompt length under a ragged layout (``x`` is
+      then ``plan.seq_layout(seq).scatter`` of the prompt); dense layouts
+      pass ``x`` as-is.
+    * cache kind   — ``cache`` is the dense per-layer k/v list from
+      ``make_kv_cache`` by default; passing ``block_row=`` (this request's
+      physical page ids, ``(pages_per_slot,)``) makes it the paged pool
+      from ``make_paged_kv_cache`` and K/V scatter straight into pages
+      (batch must be 1).
+    * ``offset=``  — chunked / suffix-only prefill (paged only): ``x`` is
+      one chunk starting at absolute position ``offset``; K/V land at
+      [offset, offset + seq) and the chunk attends back to every
+      already-written position below ``offset``.  A traced int32 scalar is
+      fine — one compiled program per chunk shape.
+
+    x: (B, S, d).  K/V land in the cache at absolute positions either way.
+    Returns (y, cache) with y in the same layout as x.
     """
+    if block_row is None:
+        if offset is not None:
+            raise ValueError(
+                "offset= (chunked prefill) needs a paged cache; pass the "
+                "request's block_row= as well"
+            )
+        return _prefill_dense(layers, x, mesh, cache, plan=plan,
+                              overlap=overlap, seq=seq)
+    return _prefill_paged(layers, x, mesh, cache, block_row, plan=plan,
+                          overlap=overlap, seq=seq, offset=offset)
+
+
+def _prefill_dense(layers: Sequence[Dict], x, mesh: Mesh, cache: List[Dict],
+                   *, plan: ExecPlan, overlap: bool, seq: Optional[int]):
     validated = [_validate_plan(p, x, mesh, plan, seq=seq) for p in layers]
     layers = [p for p, _ in validated]
     layout = validated[0][1] if validated else None
@@ -536,13 +598,25 @@ def _decode_layer_local(p, x, ck, cv, index, *,
 
 
 def hmp_decode(layers: Sequence[Dict], x, mesh: Mesh, cache: List[Dict],
-               index, *, plan: ExecPlan):
+               index, *, plan: ExecPlan, block_table=None):
     """One decode step for a stack of HMP layers against the KV cache.
 
-    x: (B, 1, d) current-token embedding (replicated); index: scalar int32
-    or (B,) vector of absolute positions (per-slot depths for mixed-length
-    waves).  Returns (y, cache) with y replicated.
+    The unified decode entry point: against the dense cache (default) x is
+    a (B, 1, d) current-token embedding (replicated) and ``index`` a scalar
+    int32 or (B,) vector of absolute positions (per-slot depths for
+    mixed-length waves).  Passing ``block_table=`` ((S, W) int32 physical
+    page per (slot, logical page)) makes ``cache`` the paged pool for a
+    continuous-batching slot batch: x is (S, 1, d) and ``index`` the (S,)
+    per-slot write positions.  Returns (y, cache) with y replicated.
     """
+    if block_table is not None:
+        return _decode_paged(layers, x, mesh, cache, block_table, index,
+                             plan=plan)
+    return _decode_dense(layers, x, mesh, cache, index, plan=plan)
+
+
+def _decode_dense(layers: Sequence[Dict], x, mesh: Mesh, cache: List[Dict],
+                  index, *, plan: ExecPlan):
     layers = [_validate_plan(p, None, mesh, plan)[0] for p in layers]
     backend = plan.compute_backend
     fn = shard_map(
@@ -637,23 +711,27 @@ def hmp_prefill_paged(layers: Sequence[Dict], x, mesh: Mesh,
                       pages: List[Dict], block_row, *, plan: ExecPlan,
                       overlap: bool = False, seq: Optional[int] = None,
                       offset=None):
-    """Run a stack of HMP layers over one prompt, writing KV into pool pages.
+    """Deprecated shim: use ``hmp_prefill(..., block_row=, offset=)``."""
+    warnings.warn(
+        _DEPRECATED_PAGED_NOTE.format(
+            old="hmp_prefill_paged",
+            new="hmp_prefill(..., block_row=, offset=)"),
+        DeprecationWarning, stacklevel=2,
+    )
+    return hmp_prefill(layers, x, mesh, pages, plan=plan, overlap=overlap,
+                       seq=seq, block_row=block_row, offset=offset)
 
-    x: (1, S, d) — the (bucket-padded) prompt for a dense layout, or the
-    plan's padded ragged layout of a ``seq``-row prompt.  Bucket-padding
-    positions beyond the real prompt write zero-token KV that decode
-    overwrites before reading, same as before.  block_row:
-    (pages_per_slot,) physical page ids for this request's logical pages.
-    Returns (y, pages).
 
-    ``offset`` (chunked prefill / shared-prefix suffix prefill): when given
-    (a traced int32 scalar is fine — one compiled program per chunk shape),
-    x is one *chunk* of the prompt starting at absolute position ``offset``;
-    K/V land in the pages at [offset, offset + seq) and the chunk attends
-    back to every already-written position below ``offset`` by gathering
-    the block row as context.  ``offset=None`` keeps the one-shot program
-    unchanged.
-    """
+def _prefill_paged(layers: Sequence[Dict], x, mesh: Mesh,
+                   pages: List[Dict], block_row, *, plan: ExecPlan,
+                   overlap: bool, seq: Optional[int], offset):
+    """Paged-pool prefill (see ``hmp_prefill``): x is (1, S, d) — the
+    (bucket-padded) prompt for a dense layout, or the plan's padded ragged
+    layout of a ``seq``-row prompt.  Bucket-padding positions beyond the
+    real prompt write zero-token KV that decode overwrites before reading.
+    K/V scatter into the block row's pages at absolute positions; with
+    ``offset`` the chunk additionally gathers the block row as attention
+    context (see ``_ctx_attention``).  Returns (y, pages)."""
     if x.shape[0] != 1:
         raise ValueError("paged prefill is per-request: batch must be 1")
     validated = [_validate_plan(p, x, mesh, plan, seq=seq) for p in layers]
@@ -697,6 +775,26 @@ def hmp_prefill_paged(layers: Sequence[Dict], x, mesh: Mesh,
     return x, new_pages
 
 
+def _paged_kv_gather(pool, block_table, head_ok):
+    """Block-table gather reading only the valid head slots of real pages.
+
+    pool: (P, page, H, hd); block_table: (S, W); head_ok: (H,) bool — which
+    padded head slots hold this device's real heads.  Pad head slots' page
+    reads are routed to the null page (page 0): its pad-head entries are
+    zero forever (initialized zero; idle-slot writes put the projection of
+    zero weights there), exactly what the old whole-page gather read out of
+    real pages' pad slots — so the result is bitwise-identical while the
+    gather only touches ``plan.heads[d]`` valid slots of live pages.
+    Returns (S, W*page, H, hd)."""
+    s, w = block_table.shape
+    page, h, hd = pool.shape[1], pool.shape[2], pool.shape[3]
+    bt = jnp.where(head_ok[None, None, :], block_table[:, :, None], 0)
+    # advanced indices at axes 0 and 2 broadcast to (S, W, H) and land in
+    # front of the kept axes: (S, W, H, page, hd)
+    out = pool[bt, :, jnp.arange(h)[None, None, :], :]
+    return out.transpose(0, 1, 3, 2, 4).reshape(s, w * page, h, hd)
+
+
 def _decode_paged_layer_local(p, x, pk, pv, block_table, positions, *,
                               plan: Optional[ExecPlan] = None,
                               backend: str = "xla"):
@@ -725,8 +823,18 @@ def _decode_paged_layer_local(p, x, pk, pv, block_table, positions, *,
     pv = pv.at[phys, within].set(v_new[:, 0])
 
     # gather this slot's logical context: (S, W, page, h, hd) -> (S, T, h, hd)
-    ks = pk[block_table].reshape(x.shape[0], w * page_size, h_loc, hd)
-    vs = pv[block_table].reshape(x.shape[0], w * page_size, h_loc, hd)
+    if plan is not None and len(set(plan.heads)) > 1:
+        # uneven heads: read only this device's valid head slots of live
+        # pages — pad slots route to the (zero) null page, bitwise-equal to
+        # the whole-page gather.  Even plans keep the plain gather (and its
+        # exact XLA graph): every slot is valid there.
+        idx = jax.lax.axis_index(AXIS)
+        head_ok = jnp.arange(h_loc) < jnp.asarray(plan.heads, jnp.int32)[idx]
+        ks = _paged_kv_gather(pk, block_table, head_ok)
+        vs = _paged_kv_gather(pv, block_table, head_ok)
+    else:
+        ks = pk[block_table].reshape(x.shape[0], w * page_size, h_loc, hd)
+        vs = pv[block_table].reshape(x.shape[0], w * page_size, h_loc, hd)
 
     scores = jnp.einsum("bqhd,bthd->bhqt", q, ks).astype(jnp.float32) / np.sqrt(hd)
     valid = jnp.arange(w * page_size)[None, :] <= positions[:, None]  # (S, T)
@@ -743,12 +851,22 @@ def _decode_paged_layer_local(p, x, pk, pv, block_table, positions, *,
 def hmp_decode_paged(layers: Sequence[Dict], x, mesh: Mesh,
                      pages: List[Dict], block_table, positions, *,
                      plan: ExecPlan):
-    """One continuous-batching decode step against the paged KV pool.
+    """Deprecated shim: use ``hmp_decode(..., block_table=)``."""
+    warnings.warn(
+        _DEPRECATED_PAGED_NOTE.format(
+            old="hmp_decode_paged", new="hmp_decode(..., block_table=)"),
+        DeprecationWarning, stacklevel=2,
+    )
+    return hmp_decode(layers, x, mesh, pages, positions, plan=plan,
+                      block_table=block_table)
 
-    x: (S, 1, d) slot-batch embeddings (replicated); block_table: (S, W)
-    int32; positions: (S,) int32 per-slot absolute positions.  Returns
-    (y, pages) with y replicated.
-    """
+
+def _decode_paged(layers: Sequence[Dict], x, mesh: Mesh,
+                  pages: List[Dict], block_table, positions, *,
+                  plan: ExecPlan):
+    """Paged slot-batch decode step (see ``hmp_decode``): x is (S, 1, d)
+    replicated; block_table (S, W) int32; positions (S,) int32 per-slot
+    absolute positions.  Returns (y, pages) with y replicated."""
     layers = [_validate_plan(p, None, mesh, plan)[0] for p in layers]
     backend = plan.compute_backend
     fn = shard_map(

@@ -58,6 +58,9 @@ class Plan:
     seq: np.ndarray        # sequence fractions (S) — equal split
     feasible: bool
     reason: str = ""
+    # sequence fraction each ring hop ships per device (bucketed ragged
+    # transport, ExecPlan.wire_fractions); None -> the hops ship ``seq``
+    seq_wire: Optional[np.ndarray] = None
 
     def memory_per_device(self, model: ModelProfile) -> np.ndarray:
         a = self.mha / max(self.mha.sum(), 1)

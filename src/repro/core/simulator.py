@@ -192,8 +192,13 @@ def simulate(
 
         # each ring rotation moves the per-device sequence tiles; a step is
         # gated by the slowest (held tile, outgoing link) pair.  For equal
-        # tiles on a uniform link this equals the old closed forms.
-        tile_bytes = seq_frac * act
+        # tiles on a uniform link this equals the old closed forms.  Bucketed
+        # ragged transport ships bucket-rounded rows (Plan.seq_wire) instead
+        # of whatever the compute view holds — compute/connective terms above
+        # stay on ``seq``, only the wire is repriced.
+        wire_frac = seq_frac if getattr(pl, "seq_wire", None) is None \
+            else np.asarray(pl.seq_wire, dtype=float)
+        tile_bytes = wire_frac * act
         t_rotation = costmodel.t_ring_exchange(tile_bytes, links)
         pairs = [
             (qkv_flops, a_frac),   # AllGather ⊗ QKV GEMM

@@ -52,13 +52,23 @@ class GalaxyHMPExecutor:
             (``execplan.COMPUTE_BACKENDS``): "xla" is the padded dense
             oracle, "pallas" sheds pad-block work in every prefill/decode
             matmul (and the prefill attention) via ``kernels/ops.py``.
+    transport / double_buffer: override the plan's ring transport
+            (``ring.RING_TRANSPORTS``): "bucketed" ships each ring hop at
+            its tile's bucketed row count instead of the straggler pad,
+            and ``double_buffer=True`` issues step k+1's exchange before
+            step k's GEMM so the wire hides under compute.  Both leave
+            results bitwise-identical to the padded ring.
     """
 
     def __init__(self, layers: Sequence[Dict], embed, plan: ExecPlan,
                  mesh: Mesh, *, overlap: bool = True,
-                 compute_backend: Optional[str] = None):
+                 compute_backend: Optional[str] = None,
+                 transport: Optional[str] = None,
+                 double_buffer: Optional[bool] = None):
         if compute_backend is not None:
             plan = plan.with_backend(compute_backend)
+        if transport is not None or double_buffer is not None:
+            plan = plan.with_transport(transport, double_buffer=double_buffer)
         self.plan = plan
         self.mesh = mesh
         self.overlap = overlap
@@ -150,8 +160,8 @@ class GalaxyHMPExecutor:
         """One chunked-prefill step (batch 1): run a grain-aligned chunk of
         the prompt at absolute positions [offset, offset + S) through the
         Galaxy schedule, attending back to the pages already written by the
-        shared prefix and earlier chunks (``hmp_prefill_paged(offset=)``
-        gathers the block row as attention context inside the shard_map).
+        shared prefix and earlier chunks (``hmp_prefill(offset=)`` gathers
+        the block row as attention context inside the shard_map).
         Returns ``(logits, pool)`` with the logits row at the last real
         prompt token — meaningful on the chunk covering ``length - 1``."""
         b, s = tokens.shape
@@ -165,9 +175,9 @@ class GalaxyHMPExecutor:
             def prefill(layers, embed, tokens, pool, block_row, offset, length):
                 tokens = layout.scatter(tokens)  # identity when dense
                 x = embed[tokens]  # (1, padded, d)
-                y, pool = hmp.hmp_prefill_paged(
-                    layers, x, mesh, pool, block_row, plan=plan,
-                    overlap=overlap, seq=s, offset=offset,
+                y, pool = hmp.hmp_prefill(
+                    layers, x, mesh, pool, plan=plan, overlap=overlap,
+                    seq=s, block_row=block_row, offset=offset,
                 )
                 y = layout.gather(y)
                 idx = jnp.clip(length - 1 - offset, 0, s - 1)
@@ -194,9 +204,9 @@ class GalaxyHMPExecutor:
             def prefill(layers, embed, tokens, pool, block_row, length):
                 tokens = layout.scatter(tokens)  # identity when dense
                 x = embed[tokens]  # (1, padded, d)
-                y, pool = hmp.hmp_prefill_paged(
-                    layers, x, mesh, pool, block_row, plan=plan,
-                    overlap=overlap, seq=s
+                y, pool = hmp.hmp_prefill(
+                    layers, x, mesh, pool, plan=plan, overlap=overlap,
+                    seq=s, block_row=block_row,
                 )
                 y = layout.gather(y)
                 logits = y[:, length - 1] @ embed.T
@@ -215,8 +225,9 @@ class GalaxyHMPExecutor:
 
             def decode(layers, embed, tokens, pool, block_table, positions):
                 x = embed[tokens]  # (S, 1, d)
-                y, pool = hmp.hmp_decode_paged(
-                    layers, x, mesh, pool, block_table, positions, plan=plan
+                y, pool = hmp.hmp_decode(
+                    layers, x, mesh, pool, positions, plan=plan,
+                    block_table=block_table,
                 )
                 logits = y[:, -1] @ embed.T
                 return logits, pool

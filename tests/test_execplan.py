@@ -616,6 +616,65 @@ def test_uneven_seq_serving_acceptance():
     """, devices=4)
 
 
+def test_overlap_transport_serving_acceptance():
+    """ISSUE acceptance: bucketed ragged transport + double-buffered tile
+    overlap through the full serving stack — a 4-device uneven plan serves
+    with ``transport='bucketed', double_buffer=True`` on both schedulers,
+    greedy tokens pinned equal to the padded-transport executor and a
+    full-context reference recompute, and the executor's plan confirms the
+    transport actually sheds wire rows."""
+    run_multidevice("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.core import hmp
+        from repro.core.execplan import ExecPlan
+        from repro.launch.mesh import make_mesh_compat
+        from repro.serving import GalaxyHMPExecutor, Request, ServingEngine
+
+        # uneven on every axis: heads, columns, and sequence tiles
+        ep = ExecPlan(heads=(6, 4, 4, 2), columns=(24, 16, 16, 8), head_dim=2,
+                      d_model=32, seq_shares=(3.0, 2.0, 2.0, 1.0))
+        mesh = make_mesh_compat((4,), ('model',))
+        vocab, n_layers = 50, 3
+        layers = hmp.init_stack_params(jax.random.PRNGKey(0), n_layers, 32, 16, 64)
+        emb = jax.random.normal(jax.random.PRNGKey(7), (vocab, 32)) * 0.5
+        prompts = [[1,2,3,4,5,6,7,8,9,10,11], [4,7,1,9,2,8,3,6,5,10,12],
+                   [3,1,4,1,5,9,2,6], [2,7,1,8]]
+
+        def serve(exe, scheduler):
+            eng = ServingEngine(executor=exe, max_batch=3, max_len=24,
+                                scheduler=scheduler, page_size=8)
+            for i, pr in enumerate(prompts):
+                eng.submit(Request(uid=i, prompt=list(pr), max_new_tokens=3 + i))
+            return {r.uid: r.output for r in eng.run()}
+
+        exe_pad = GalaxyHMPExecutor(layers, emb, ep, mesh, overlap=True)
+        exe_db = GalaxyHMPExecutor(layers, emb, ep, mesh, overlap=True,
+                                   transport='bucketed', double_buffer=True)
+        assert exe_db.plan.transport == 'bucketed' and exe_db.plan.double_buffer
+        sched = exe_db.plan.ring_schedule(128)
+        assert sched.total_wire_rows() < sched.padded_wire_rows(), \\
+            'bucketed transport sheds no wire on this plan'
+
+        runs = {(label, scheduler): serve(exe, scheduler)
+                for label, exe in (('padded', exe_pad), ('bucketed_db', exe_db))
+                for scheduler in ('wave', 'continuous')}
+        first = runs[('padded', 'wave')]
+        for key, out in runs.items():
+            assert out == first, (key, out, first)
+
+        # and the shared answer is the full-context greedy reference
+        for uid, pr in enumerate(prompts):
+            toks = list(pr)
+            for _ in range(3 + uid):
+                y = hmp.reference_stack(layers, emb[jnp.asarray([toks])])
+                toks.append(int(jnp.argmax(y[:, -1] @ emb.T, -1)[0]))
+            assert first[uid] == toks[len(pr):], (uid, first[uid], toks[len(pr):])
+            print('request', uid, 'tokens ok', first[uid])
+        print('wire rows', sched.total_wire_rows(), '/',
+              sched.padded_wire_rows())
+    """, devices=4)
+
+
 def test_prefix_cache_serving_acceptance():
     """ISSUE acceptance on the Galaxy executor: greedy tokens with the
     shared-prefix KV cache on == cache off == chunked prefill ==
@@ -777,17 +836,23 @@ def test_ring_tile_size_validation():
             else:
                 raise SystemExit('expected ValueError for non-dividing seq')
 
-        # explicit tile_size that disagrees with the shapes is also rejected
+        # a schedule whose pad_tile disagrees with the shapes is rejected,
+        # and so is the deprecated tile_size= spelling of the same mistake
         h2 = jax.random.normal(jax.random.PRNGKey(0), (1, 32, 16))
-        try:
-            shard_map(lambda hl, wl: ring.matmul_ring_reducescatter(
-                          hl, wl, 'model', tile_size=4), mesh=mesh,
-                      in_specs=(P(None, None, 'model'), P('model', None)),
-                      out_specs=P(None, 'model', None))(h2, w)
-        except ValueError as e:
-            print('ok:', type(e).__name__)
-        else:
-            raise SystemExit('expected ValueError for wrong tile_size')
+        bad4 = ring.RingSchedule.dense(4, 4)
+        import warnings
+        for kw in ({'schedule': bad4}, {'tile_size': 4}):
+            try:
+                with warnings.catch_warnings():
+                    warnings.simplefilter('ignore', DeprecationWarning)
+                    shard_map(lambda hl, wl: ring.matmul_ring_reducescatter(
+                                  hl, wl, 'model', **kw), mesh=mesh,
+                              in_specs=(P(None, None, 'model'), P('model', None)),
+                              out_specs=P(None, 'model', None))(h2, w)
+            except ValueError as e:
+                print('ok:', type(e).__name__)
+            else:
+                raise SystemExit('expected ValueError for wrong tile size')
 
         # hmp_layer under a plan rejects a non-dividing sequence up front
         ep = ExecPlan.even(4, num_heads=8, d_ff=32, head_dim=4, d_model=32)

@@ -5,7 +5,14 @@ The ring primitives only need a named axis, not a physical mesh: ``jax.vmap
 over the mapped axis on a single device, so hypothesis can sweep random tile
 splits (including zero-sized tiles) cheaply in-process.  The shard_map path
 over real forced devices is covered by tests/test_execplan.py.
+
+Every sweep runs all three transport variants — padded, bucketed, and
+bucketed with double-buffered tile overlap — and asserts the bucketed
+variants are *bitwise* equal to the padded ring (same summation order, pad
+rows zero either way), which in turn matches the sync reference.
 """
+import warnings
+
 import numpy as np
 import pytest
 
@@ -16,6 +23,7 @@ import jax  # noqa: E402
 import jax.numpy as jnp  # noqa: E402
 
 from repro.core import ring  # noqa: E402
+from repro.core.ring import RingSchedule  # noqa: E402
 from repro.core.execplan import SeqLayout  # noqa: E402
 
 D_MODEL, F_LOC, BATCH = 6, 5, 2
@@ -24,11 +32,21 @@ tiles_strategy = st.lists(st.integers(0, 5), min_size=2, max_size=6).filter(
     lambda t: max(t) > 0
 )
 
+VARIANTS = (
+    dict(transport="padded"),
+    dict(transport="bucketed"),
+    dict(transport="bucketed", double_buffer=True),
+    dict(transport="padded", double_buffer=True),
+)
 
-def _ring_over(fn, layout):
+
+def _schedule(layout, **kw):
+    return RingSchedule.ragged(layout.tiles, pad_tile=layout.pad_tile, **kw)
+
+
+def _ring_over(fn, sched):
     return jax.vmap(
-        lambda a, w: fn(a, w, "ring", tile_size=layout.pad_tile,
-                        valid_sizes=layout.tiles),
+        lambda a, w: fn(a, w, "ring", schedule=sched),
         axis_name="ring",
     )
 
@@ -47,8 +65,8 @@ def test_ragged_allgather_matmul_matches_sync(tiles, seed):
     x_dev = jnp.asarray(layout.scatter(x)).reshape(
         BATCH, n, t, D_MODEL).transpose(1, 0, 2, 3)
 
-    out_ring = _ring_over(ring.ring_allgather_matmul, layout)(x_dev, w)
-    out_sync = _ring_over(ring.sync_allgather_matmul, layout)(x_dev, w)
+    out_ring = _ring_over(ring.ring_allgather_matmul, _schedule(layout))(x_dev, w)
+    out_sync = _ring_over(ring.sync_allgather_matmul, _schedule(layout))(x_dev, w)
 
     # reference: dense GEMM of the real rows, scattered to the padded
     # layout; pad rows must be exactly zero
@@ -58,6 +76,13 @@ def test_ragged_allgather_matmul_matches_sync(tiles, seed):
                                atol=1e-4)
     np.testing.assert_allclose(np.asarray(out_sync), np.asarray(ref_pad),
                                atol=1e-4)
+
+    # bucketed / double-buffered transports keep the dataflow and summation
+    # order, so the outputs must be bitwise-identical to the padded ring
+    for kw in VARIANTS[1:]:
+        out_v = _ring_over(ring.ring_allgather_matmul,
+                           _schedule(layout, **kw))(x_dev, w)
+        assert np.array_equal(np.asarray(out_v), np.asarray(out_ring)), kw
 
 
 @settings(max_examples=30, deadline=None)
@@ -74,8 +99,8 @@ def test_ragged_reducescatter_matches_sync(tiles, seed):
     h = jax.random.normal(k1, (n, BATCH, p, F_LOC))
     w = jax.random.normal(k2, (n, F_LOC, D_MODEL))
 
-    out_ring = _ring_over(ring.matmul_ring_reducescatter, layout)(h, w)
-    out_sync = _ring_over(ring.sync_matmul_reducescatter, layout)(h, w)
+    out_ring = _ring_over(ring.matmul_ring_reducescatter, _schedule(layout))(h, w)
+    out_sync = _ring_over(ring.sync_matmul_reducescatter, _schedule(layout))(h, w)
 
     h_masked = jnp.where(jnp.asarray(layout.valid)[None, None, :, None], h, 0)
     full = jnp.einsum("nbsf,nfd->bsd", h_masked, w)
@@ -85,19 +110,51 @@ def test_ragged_reducescatter_matches_sync(tiles, seed):
     np.testing.assert_allclose(np.asarray(out_sync), np.asarray(ref),
                                atol=1e-4)
 
+    for kw in VARIANTS[1:]:
+        out_v = _ring_over(ring.matmul_ring_reducescatter,
+                           _schedule(layout, **kw))(h, w)
+        assert np.array_equal(np.asarray(out_v), np.asarray(out_ring)), kw
+
+
+def test_legacy_kwargs_warn_and_match():
+    """The deprecated tile_size=/valid_sizes= signature still runs (shim),
+    warns, and is bitwise-identical to the schedule it resolves to."""
+    layout = SeqLayout((2, 0, 3, 1))
+    n, t = layout.num_devices, layout.pad_tile
+    x = jax.random.normal(jax.random.PRNGKey(0), (n, BATCH, t, D_MODEL))
+    w = jax.random.normal(jax.random.PRNGKey(1), (n, D_MODEL, F_LOC))
+    new = _ring_over(ring.ring_allgather_matmul, _schedule(layout))(x, w)
+    with pytest.warns(DeprecationWarning, match="RingSchedule"):
+        old = jax.vmap(
+            lambda a, b: ring.ring_allgather_matmul(
+                a, b, "ring", tile_size=t, valid_sizes=layout.tiles),
+            axis_name="ring",
+        )(x, w)
+    assert np.array_equal(np.asarray(old), np.asarray(new))
+
 
 def test_valid_sizes_validation():
     x = jnp.zeros((1, 4, D_MODEL))
     w = jnp.zeros((D_MODEL, F_LOC))
-    with pytest.raises(ValueError, match="valid_sizes"):
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        with pytest.raises(ValueError, match="valid_sizes"):
+            jax.vmap(
+                lambda a, b: ring.ring_allgather_matmul(
+                    a, b, "ring", valid_sizes=(1, 2, 3)),  # 3 sizes, 2 devices
+                axis_name="ring",
+            )(jnp.stack([x, x]), jnp.stack([w, w]))
+        with pytest.raises(ValueError, match="tile_size"):
+            jax.vmap(
+                lambda a, b: ring.ring_allgather_matmul(
+                    a, b, "ring", valid_sizes=(5, 2)),  # 5 > tile of 4
+                axis_name="ring",
+            )(jnp.stack([x, x]), jnp.stack([w, w]))
+    # mixing the schedule with legacy kwargs is an error, not a silent pick
+    with pytest.raises(ValueError, match="not both"):
         jax.vmap(
             lambda a, b: ring.ring_allgather_matmul(
-                a, b, "ring", valid_sizes=(1, 2, 3)),  # 3 sizes, 2 devices
-            axis_name="ring",
-        )(jnp.stack([x, x]), jnp.stack([w, w]))
-    with pytest.raises(ValueError, match="tile_size"):
-        jax.vmap(
-            lambda a, b: ring.ring_allgather_matmul(
-                a, b, "ring", valid_sizes=(5, 2)),  # 5 > tile of 4
+                a, b, "ring", schedule=RingSchedule.dense(2, 4),
+                valid_sizes=(4, 4)),
             axis_name="ring",
         )(jnp.stack([x, x]), jnp.stack([w, w]))

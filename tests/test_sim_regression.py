@@ -97,6 +97,12 @@ def _score(eplan, cfg, devices, link, seq):
         "padshed_us": simulate_execplan(
             eplan.with_backend("pallas"), cfg, devices, link, seq,
             overlap=True, padded=True).latency * 1e6,
+        # SPMD execution with bucketed ragged transport + double-buffered
+        # tile overlap: compute stays padded, but every ring hop ships only
+        # its tile's bucketed rows (ExecPlan.wire_fractions)
+        "bucketed_overlap_us": simulate_execplan(
+            eplan.with_transport("bucketed", double_buffer=True), cfg,
+            devices, link, seq, overlap=True, padded=True).latency * 1e6,
         # suffix-only prefill after a shared-prefix KV-cache hit covering
         # half the prompt: GEMMs/transport run over seq/2 rows, the
         # attention core reads the full seq keys from shared pages
