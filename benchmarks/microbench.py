@@ -815,7 +815,111 @@ print(f"page_bytes,{ep.kv_page_bytes(8)},{ep.describe()}")
            rows["page_bytes"][1])
 
 
+def spec_decode() -> Iterator[Row]:
+    """Speculative decoding (``serving/spec.py``) in the batch-1 latency
+    regime: a 2-layer draft proposes k=4 tokens, a 12-layer target verifies
+    all of them in one 5-row chunk prefill over the paged cache.
+
+    The model pair is constructed so the draft genuinely approximates the
+    target: the target's first two layer groups *are* the draft's (same
+    embedding, tied unembedding), and its remaining ten layers are random
+    weights scaled by eps=0.2 — a small residual on top of the shared
+    trunk, yielding a high-but-imperfect acceptance rate (rejections and
+    all-accept rounds both occur).
+
+    Acceptance gates (raise, not assert — they must also gate under -O):
+
+    1. Greedy tokens are bitwise identical spec on vs off (the engine
+       contract: verification pins the sequential argmax path).
+    2. Speculation actually accepted drafts (acceptance rate > 0) and at
+       least one round rejected a draft (the rollback path ran).
+    3. Tokens/sec improves with speculation on.
+    """
+    import dataclasses
+
+    from repro.configs import get_config, reduced
+    from repro.models import init_params
+    from repro.serving import Request, ServingEngine, TransformerExecutor
+
+    draft_cfg = reduced(get_config("qwen1.5-0.5b"))
+    target_cfg = dataclasses.replace(
+        reduced(get_config("codeqwen1.5-7b")),
+        num_layers=12, tie_embeddings=True,
+    )
+    draft_params = init_params(draft_cfg, jax.random.PRNGKey(0))
+    target_params = init_params(target_cfg, jax.random.PRNGKey(1))
+    eps = 0.2
+    target_params = {
+        "embed": draft_params["embed"],
+        "final_norm": draft_params["final_norm"],
+        "tail": target_params["tail"],
+        "groups": jax.tree.map(
+            lambda d, t: jnp.concatenate(
+                [d, t[draft_cfg.num_layers:] * eps], axis=0)
+            if jnp.issubdtype(t.dtype, jnp.floating) else t,
+            draft_params["groups"], target_params["groups"],
+        ),
+    }
+    target_exec = TransformerExecutor(target_params, target_cfg)
+    draft_exec = TransformerExecutor(draft_params, draft_cfg)
+
+    def requests():  # skewed prompt lengths, batch-1 latency mix
+        return [
+            Request(uid=i,
+                    prompt=[1 + (i * 7 + j) % 200
+                            for j in range(24 if i % 3 == 0 else 8)],
+                    max_new_tokens=32 if i % 2 == 0 else 12)
+            for i in range(6)
+        ]
+
+    def run_once(spec: bool):
+        eng = ServingEngine(executor=target_exec, max_batch=1, max_len=64,
+                            scheduler="continuous", page_size=8,
+                            draft_executor=draft_exec if spec else None,
+                            spec_k=4 if spec else None)
+        for r in requests():
+            eng.submit(r)
+        t0 = time.perf_counter()
+        done = eng.run()
+        wall = time.perf_counter() - t0
+        return done, wall, eng.stats
+
+    runs = {}
+    for spec in (False, True):
+        run_once(spec)  # warm the jit caches
+        runs[spec] = run_once(spec)
+
+    done_off, wall_off, stats_off = runs[False]
+    done_on, wall_on, stats_on = runs[True]
+    if ({r.uid: tuple(r.output) for r in done_off}
+            != {r.uid: tuple(r.output) for r in done_on}):
+        raise RuntimeError("greedy tokens diverged between spec on/off")
+    if stats_on["spec_accepted"] <= 0:
+        raise RuntimeError("speculation never accepted a draft token")
+    if stats_on["spec_accepted"] >= stats_on["spec_proposed"]:
+        raise RuntimeError("no draft was ever rejected: rollback never ran")
+    if wall_on >= wall_off:
+        raise RuntimeError(
+            f"speculation did not improve tokens/sec "
+            f"({wall_off:.3f}s off vs {wall_on:.3f}s on)"
+        )
+
+    toks_off = sum(len(r.output) for r in done_off)
+    toks_on = sum(len(r.output) for r in done_on)
+    yield ("serve/spec_off_us_per_token", wall_off / toks_off * 1e6,
+           f"tokens/s={toks_off / wall_off:.1f},"
+           f"decode_steps={stats_off['decode_steps']}")
+    counts = ",".join(
+        f"{k}:{v}" for k, v in sorted(stats_on["spec_accept_counts"].items()))
+    yield ("serve/spec_on_us_per_token", wall_on / toks_on * 1e6,
+           f"tokens/s={toks_on / wall_on:.1f},"
+           f"speedup={wall_off / wall_on:.2f}x,"
+           f"acceptance={stats_on['spec_acceptance']:.0%},"
+           f"rounds={stats_on['spec_steps']},"
+           f"accept_counts={counts}")
+
+
 ALL = [kernel_fusion, flash_vs_naive, profiler_blocks,
        hmp_schedules_multidevice, execplan_uneven, execplan_raggedsp,
        execplan_overlap, execplan_padshed, continuous_vs_wave,
-       continuous_vs_wave_galaxy, prefix_sharing]
+       continuous_vs_wave_galaxy, prefix_sharing, spec_decode]

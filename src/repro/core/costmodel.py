@@ -193,6 +193,27 @@ def model_memory_bytes(cfg: ModelConfig) -> float:
     return cfg.num_layers * (prof["m_att"] + prof["m_mlp"]) + embed
 
 
+# --- speculative decoding (serving/spec.py) -----------------------------------
+
+def spec_expected_tokens(acceptance: float, k: int) -> float:
+    """Expected tokens emitted per speculative round with k drafts.
+
+    A round emits the longest accepted draft prefix plus one token from the
+    verifier itself (the correction on a mismatch, the bonus row when all k
+    match).  Modeling per-position agreement as i.i.d. with probability
+    ``acceptance``, the emitted count is ``1 + min(Geom, k)`` and its mean
+    telescopes to ``(1 - a^(k+1)) / (1 - a)`` — between 1 (a=0: every round
+    still emits the verifier's own token) and k+1 (a=1: every draft lands).
+    """
+    if not 0.0 <= acceptance <= 1.0:
+        raise ValueError(f"acceptance {acceptance} must lie in [0, 1]")
+    if k < 1:
+        raise ValueError(f"k must be >= 1, got {k}")
+    if acceptance == 1.0:
+        return float(k + 1)
+    return (1.0 - acceptance ** (k + 1)) / (1.0 - acceptance)
+
+
 # --- calibration hooks (experiments/calibrate.py) ----------------------------
 
 # constants the measured-vs-simulated loop may override, and where they live;

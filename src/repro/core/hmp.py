@@ -57,9 +57,9 @@ keyword-normalized entry family covers every cache kind: ``seq=``,
 entry point — a chunk starting at an absolute offset attends back to the
 KV pages already written by a shared prompt prefix
 (``serving/prefix_cache.py``) and earlier chunks.  ``hmp_decode(...,
-block_table=)`` is the paged slot-batch decode step.  The old
-``hmp_prefill_paged`` / ``hmp_decode_paged`` names remain as deprecation
-shims for one release.
+block_table=)`` is the paged slot-batch decode step.  (The pre-unification
+``hmp_prefill_paged`` / ``hmp_decode_paged`` names were shimmed for one
+release and have been removed.)
 
 The ring side of every prefill runs a ``ring.RingSchedule`` built from the
 plan (``ExecPlan.ring_schedule``): the plan's ``transport`` /
@@ -75,7 +75,6 @@ equivalence tests, benchmarks, and as the template for the perf work.
 from __future__ import annotations
 
 import functools
-import warnings
 from typing import Dict, List, Optional, Sequence
 
 import jax
@@ -464,13 +463,6 @@ def _prefill_layer_local(p, x_loc, ck, cv, *, overlap: bool,
     return y_loc, ck, cv
 
 
-_DEPRECATED_PAGED_NOTE = (
-    "{old} is deprecated and will be removed in the next release; "
-    "use {new} — the unified entry family composes seq=, plan=, the cache "
-    "kind and offset= orthogonally"
-)
-
-
 def hmp_prefill(layers: Sequence[Dict], x, mesh: Mesh, cache: List[Dict],
                 *, plan: ExecPlan, overlap: bool = False,
                 seq: Optional[int] = None, block_row=None, offset=None):
@@ -707,21 +699,6 @@ def _prefill_chunk_layer_local(p, x_loc, pk, pv, phys, within, block_row,
     return y_loc, pk, pv
 
 
-def hmp_prefill_paged(layers: Sequence[Dict], x, mesh: Mesh,
-                      pages: List[Dict], block_row, *, plan: ExecPlan,
-                      overlap: bool = False, seq: Optional[int] = None,
-                      offset=None):
-    """Deprecated shim: use ``hmp_prefill(..., block_row=, offset=)``."""
-    warnings.warn(
-        _DEPRECATED_PAGED_NOTE.format(
-            old="hmp_prefill_paged",
-            new="hmp_prefill(..., block_row=, offset=)"),
-        DeprecationWarning, stacklevel=2,
-    )
-    return hmp_prefill(layers, x, mesh, pages, plan=plan, overlap=overlap,
-                       seq=seq, block_row=block_row, offset=offset)
-
-
 def _prefill_paged(layers: Sequence[Dict], x, mesh: Mesh,
                    pages: List[Dict], block_row, *, plan: ExecPlan,
                    overlap: bool, seq: Optional[int], offset):
@@ -846,19 +823,6 @@ def _decode_paged_layer_local(p, x, pk, pv, block_table, positions, *,
     else:
         g = jax.lax.psum(attn @ p["wo"].reshape(-1, d_model), AXIS)
     return _decode_mlp_tail(p, x, g, compute), pk, pv
-
-
-def hmp_decode_paged(layers: Sequence[Dict], x, mesh: Mesh,
-                     pages: List[Dict], block_table, positions, *,
-                     plan: ExecPlan):
-    """Deprecated shim: use ``hmp_decode(..., block_table=)``."""
-    warnings.warn(
-        _DEPRECATED_PAGED_NOTE.format(
-            old="hmp_decode_paged", new="hmp_decode(..., block_table=)"),
-        DeprecationWarning, stacklevel=2,
-    )
-    return hmp_decode(layers, x, mesh, pages, positions, plan=plan,
-                      block_table=block_table)
 
 
 def _decode_paged(layers: Sequence[Dict], x, mesh: Mesh,

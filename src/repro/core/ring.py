@@ -63,15 +63,14 @@ users.  All four functions are bitwise-consistent with each other up to
 floating-point summation order (the ring fixes a deterministic order, which
 bucketing and double buffering both preserve exactly).
 
-Deprecated: the pre-schedule keywords (``tile_size=``, ``valid_sizes=``,
-``gemm=``) still work on all four primitives through shims that build the
-equivalent padded-transport ``RingSchedule`` and emit a
-``DeprecationWarning``; they will be removed in the next release.
+The schedule is the only configuration surface: the pre-schedule keywords
+(``tile_size=``, ``valid_sizes=``, ``gemm=``) were deprecated shims for one
+release and have been removed — build a ``RingSchedule`` (``.dense`` /
+``.ragged`` / ``.with_gemm``) instead.
 """
 from __future__ import annotations
 
 import dataclasses
-import warnings
 from typing import Callable, Optional, Sequence, Tuple
 
 import jax
@@ -88,12 +87,6 @@ RING_TRANSPORTS = ("padded", "bucketed")
 #: default bucket granularity: tiles round up to pad_tile/4 row multiples,
 #: so a hop decomposes into at most 4 segment ppermutes
 BUCKETS_PER_TILE = 4
-
-_DEPRECATED_KWARGS_NOTE = (
-    "the tile_size=/valid_sizes=/gemm= keywords on ring primitives are "
-    "deprecated and will be removed in the next release; pass "
-    "schedule=RingSchedule.ragged(...) (or .dense(...)) instead"
-)
 
 
 def _perm(axis_size: int, shift: int = 1):
@@ -325,115 +318,51 @@ def _pin(*vals):
         return vals
 
 
-def _check_valid_sizes(valid_sizes: Optional[Sequence[int]], d: int,
-                       tile_size: int) -> Optional[np.ndarray]:
-    """Normalize the per-device valid row counts of a legacy ragged call.
-
-    Returns None when masking is a no-op (no ragged info, or every tile is
-    fully valid) so the dense path keeps its exact pre-ragged XLA graph.
-    """
-    if valid_sizes is None:
-        return None
-    vs = np.asarray(valid_sizes, int)
-    if vs.shape != (d,):
+def _resolve_allgather(schedule: Optional[RingSchedule], *, d: int,
+                       s_loc: int) -> RingSchedule:
+    if schedule is None:
+        # default: dense even split over the axis, one local tile per device
+        return RingSchedule.dense(d, s_loc)
+    if schedule.num_devices != d:
         raise ValueError(
-            f"valid_sizes covers {vs.size} devices but the ring has {d}"
+            f"schedule covers {schedule.num_devices} devices "
+            f"but the ring has {d}"
         )
-    if vs.min() < 0 or vs.max() > tile_size:
+    if schedule.pad_tile != s_loc:
         raise ValueError(
-            f"valid_sizes {vs.tolist()} must lie in [0, tile_size={tile_size}]"
+            f"local sequence tile is {s_loc} rows but the schedule's "
+            f"pad_tile={schedule.pad_tile}; the ring AllGather moves "
+            "whole local tiles"
         )
-    if (vs == tile_size).all():
-        return None
-    return vs
+    return schedule
 
 
-def _legacy_schedule(d: int, tile_size: int,
-                     valid_sizes: Optional[Sequence[int]],
-                     gemm: Optional[TileGemm], *, warn: bool) -> RingSchedule:
-    if warn:
-        warnings.warn(_DEPRECATED_KWARGS_NOTE, DeprecationWarning,
-                      stacklevel=4)
-    vs = _check_valid_sizes(valid_sizes, d, tile_size)
-    tiles = [tile_size] * d if vs is None else vs.tolist()
-    return RingSchedule.ragged(tiles, pad_tile=tile_size, gemm=gemm)
-
-
-def _resolve_allgather(schedule: Optional[RingSchedule], tile_size,
-                       valid_sizes, gemm, *, d: int, s_loc: int) -> RingSchedule:
-    if schedule is not None:
-        if tile_size is not None or valid_sizes is not None or gemm is not None:
-            raise ValueError(
-                "pass either schedule= or the deprecated "
-                "tile_size=/valid_sizes=/gemm= keywords, not both"
-            )
-        if schedule.num_devices != d:
-            raise ValueError(
-                f"schedule covers {schedule.num_devices} devices "
-                f"but the ring has {d}"
-            )
-        if schedule.pad_tile != s_loc:
-            raise ValueError(
-                f"local sequence tile is {s_loc} rows but the schedule's "
-                f"pad_tile={schedule.pad_tile}; the ring AllGather moves "
-                "whole local tiles"
-            )
-        return schedule
-    legacy = (tile_size is not None or valid_sizes is not None
-              or gemm is not None)
-    if tile_size is None:
-        tile_size = s_loc
-    elif tile_size != s_loc:
-        raise ValueError(
-            f"local sequence tile is {s_loc} rows but tile_size={tile_size}; "
-            "the ring AllGather moves whole local tiles"
-        )
-    return _legacy_schedule(d, tile_size, valid_sizes, gemm, warn=legacy)
-
-
-def _resolve_scatter(schedule: Optional[RingSchedule], tile_size,
-                     valid_sizes, gemm, *, d: int, s: int) -> RingSchedule:
-    if schedule is not None:
-        if tile_size is not None or valid_sizes is not None or gemm is not None:
-            raise ValueError(
-                "pass either schedule= or the deprecated "
-                "tile_size=/valid_sizes=/gemm= keywords, not both"
-            )
-        if schedule.num_devices != d:
-            raise ValueError(
-                f"schedule covers {schedule.num_devices} devices "
-                f"but the ring has {d}"
-            )
-        if d * schedule.pad_tile != s:
-            raise ValueError(
-                f"tile_size={schedule.pad_tile} x {d} devices != sequence "
-                f"{s}; the ring ReduceScatter consumes exactly one tile per "
-                "device per step"
-            )
-        return schedule
-    legacy = (tile_size is not None or valid_sizes is not None
-              or gemm is not None)
-    if tile_size is None:
+def _resolve_scatter(schedule: Optional[RingSchedule], *, d: int,
+                     s: int) -> RingSchedule:
+    if schedule is None:
         if s % d:
             raise ValueError(
                 f"sequence {s} does not divide over a ring of {d} devices; "
                 "pass a schedule, or run a ragged layout "
                 "(ExecPlan.ring_schedule / RingSchedule.ragged)"
             )
-        tile_size = s // d
-    elif d * tile_size != s:
+        return RingSchedule.dense(d, s // d)
+    if schedule.num_devices != d:
         raise ValueError(
-            f"tile_size={tile_size} x {d} devices != sequence {s}; the ring "
-            "ReduceScatter consumes exactly one tile per device per step"
+            f"schedule covers {schedule.num_devices} devices "
+            f"but the ring has {d}"
         )
-    return _legacy_schedule(d, tile_size, valid_sizes, gemm, warn=legacy)
+    if d * schedule.pad_tile != s:
+        raise ValueError(
+            f"tile_size={schedule.pad_tile} x {d} devices != sequence "
+            f"{s}; the ring ReduceScatter consumes exactly one tile per "
+            "device per step"
+        )
+    return schedule
 
 
 def ring_allgather_matmul(x_local, w_local, axis_name: str,
-                          *, schedule: Optional[RingSchedule] = None,
-                          tile_size: Optional[int] = None,
-                          valid_sizes: Optional[Sequence[int]] = None,
-                          gemm: Optional[TileGemm] = None):
+                          *, schedule: Optional[RingSchedule] = None):
     """Overlapped computation of ``all_gather(x, seq) @ w_local``.
 
     x_local: (B, S_loc, d)   — this device's sequence tile (paper's H_i)
@@ -450,8 +379,7 @@ def ring_allgather_matmul(x_local, w_local, axis_name: str,
     d = _axis_size(axis_name)
     idx = jax.lax.axis_index(axis_name)
     b, s_loc, _ = x_local.shape
-    sched = _resolve_allgather(schedule, tile_size, valid_sizes, gemm,
-                               d=d, s_loc=s_loc)
+    sched = _resolve_allgather(schedule, d=d, s_loc=s_loc)
     vs = jnp.asarray(sched.valid_sizes) if sched.is_masked else None
     gemm_fn = sched.gemm
     ts = sched.pad_tile
@@ -487,10 +415,7 @@ def ring_allgather_matmul(x_local, w_local, axis_name: str,
 
 
 def matmul_ring_reducescatter(h_local, w_local, axis_name: str,
-                              *, schedule: Optional[RingSchedule] = None,
-                              tile_size: Optional[int] = None,
-                              valid_sizes: Optional[Sequence[int]] = None,
-                              gemm: Optional[TileGemm] = None):
+                              *, schedule: Optional[RingSchedule] = None):
     """Overlapped computation of ``psum_scatter(h_local @ w_local, seq)``.
 
     h_local: (B, S, F_loc)   — full sequence, this device's column shard (E_i)
@@ -509,7 +434,7 @@ def matmul_ring_reducescatter(h_local, w_local, axis_name: str,
     d = _axis_size(axis_name)
     idx = jax.lax.axis_index(axis_name)
     b, s, _ = h_local.shape
-    sched = _resolve_scatter(schedule, tile_size, valid_sizes, gemm, d=d, s=s)
+    sched = _resolve_scatter(schedule, d=d, s=s)
     vs = jnp.asarray(sched.valid_sizes) if sched.is_masked else None
     gemm_fn = sched.gemm
     ts = sched.pad_tile
@@ -549,18 +474,14 @@ def _global_valid_mask(vs: np.ndarray, tile_size: int) -> np.ndarray:
 
 
 def sync_allgather_matmul(x_local, w_local, axis_name: str,
-                          *, schedule: Optional[RingSchedule] = None,
-                          tile_size: Optional[int] = None,
-                          valid_sizes: Optional[Sequence[int]] = None,
-                          gemm: Optional[TileGemm] = None):
+                          *, schedule: Optional[RingSchedule] = None):
     """Unoverlapped oracle for ``ring_allgather_matmul`` (same schedule arg).
 
     Transport mode and double buffering are ring-only concerns and are
     ignored here; only the schedule's valid row counts and gemm hook apply.
     """
     d = _axis_size(axis_name)
-    sched = _resolve_allgather(schedule, tile_size, valid_sizes, gemm,
-                               d=d, s_loc=x_local.shape[1])
+    sched = _resolve_allgather(schedule, d=d, s_loc=x_local.shape[1])
     vs = sched.valid_sizes if sched.is_masked else None
     xg = jax.lax.all_gather(x_local, axis_name, axis=1, tiled=True)
     if vs is not None:
@@ -575,14 +496,10 @@ def sync_allgather_matmul(x_local, w_local, axis_name: str,
 
 
 def sync_matmul_reducescatter(h_local, w_local, axis_name: str,
-                              *, schedule: Optional[RingSchedule] = None,
-                              tile_size: Optional[int] = None,
-                              valid_sizes: Optional[Sequence[int]] = None,
-                              gemm: Optional[TileGemm] = None):
+                              *, schedule: Optional[RingSchedule] = None):
     """Unoverlapped oracle for ``matmul_ring_reducescatter``."""
     d = _axis_size(axis_name)
-    sched = _resolve_scatter(schedule, tile_size, valid_sizes, gemm,
-                             d=d, s=h_local.shape[1])
+    sched = _resolve_scatter(schedule, d=d, s=h_local.shape[1])
     vs = sched.valid_sizes if sched.is_masked else None
     if vs is not None:
         mask = _global_valid_mask(vs, sched.pad_tile)

@@ -273,6 +273,98 @@ def simulate_execplan(
                     plan=eplan.to_planner_plan(padded=padded))
 
 
+def spec_decode_summary(
+    eplan: ExecPlan,
+    cfg: ModelConfig,
+    devices: Sequence[DeviceSpec],
+    link: costmodel.Links,
+    *,
+    draft_cfg: ModelConfig,
+    k: int,
+    acceptance: float,
+    context_len: int,
+) -> Dict[str, float]:
+    """Price one speculative round against plain decode on the same plan
+    (``serving/spec.py``): the draft model runs ``k`` sequential steps alone
+    on the fastest device, then the whole mesh verifies all drafts in one
+    ``k+1``-row chunk prefill over the paged cache.
+
+    Every mesh-side step is a suffix-only prefill of the live context:
+    plain decode is the 1-row case (``cached_prefix = context - 1``) and
+    the verify chunk the ``k+1``-row case — same pricing machinery, so the
+    comparison isolates exactly what speculation changes (amortizing the
+    per-step transport/connective over ``E`` emitted tokens).  ``speedup``
+    is ``E * t_decode / (k * t_draft + t_verify)`` with ``E`` from
+    ``costmodel.spec_expected_tokens``; the planner picks ``k`` by maximizing
+    it (``choose_spec_k``).
+    """
+    if context_len <= k + 1:
+        raise ValueError(
+            f"context_len {context_len} must exceed the k+1={k + 1} verify rows"
+        )
+    e_tok = costmodel.spec_expected_tokens(acceptance, k)
+    t_decode = simulate_execplan(
+        eplan, cfg, devices, link, context_len,
+        cached_prefix=context_len - 1,
+    ).latency
+    t_verify = simulate_execplan(
+        eplan, cfg, devices, link, context_len,
+        cached_prefix=context_len - (k + 1),
+    ).latency
+    fastest = max(range(len(devices)), key=lambda i: devices[i].flops)
+    # the draft runs alone on the fastest device ("local": no transport),
+    # so a heterogeneous ring collapses to any single link
+    t_draft = simulate(
+        draft_cfg, [devices[fastest]],
+        costmodel.bottleneck_link(link, len(devices)), 1, "local",
+    ).latency
+    t_round = k * t_draft + t_verify
+    return {
+        "k": float(k),
+        "acceptance": float(acceptance),
+        "expected_tokens": e_tok,
+        "t_decode": t_decode,
+        "t_draft": t_draft,
+        "t_verify": t_verify,
+        "time_per_token_plain": t_decode,
+        "time_per_token_spec": t_round / e_tok,
+        "speedup": e_tok * t_decode / t_round,
+    }
+
+
+def choose_spec_k(
+    eplan: ExecPlan,
+    cfg: ModelConfig,
+    devices: Sequence[DeviceSpec],
+    link: costmodel.Links,
+    *,
+    draft_cfg: ModelConfig,
+    acceptance: float,
+    context_len: int,
+    k_max: int = 8,
+) -> Dict[str, float]:
+    """Sweep draft depth and return the ``spec_decode_summary`` of the best
+    ``k`` (highest modeled speedup; k=1..k_max, bounded by the context).
+    Deeper drafts amortize more mesh steps but each extra position lands
+    with probability ``acceptance^j``, so the curve peaks and then decays —
+    the returned summary is the planner's pick for ``--spec-k``."""
+    best: Optional[Dict[str, float]] = None
+    for k in range(1, k_max + 1):
+        if context_len <= k + 1:
+            break
+        s = spec_decode_summary(
+            eplan, cfg, devices, link, draft_cfg=draft_cfg,
+            k=k, acceptance=acceptance, context_len=context_len,
+        )
+        if best is None or s["speedup"] > best["speedup"]:
+            best = s
+    if best is None:
+        raise ValueError(
+            f"context_len {context_len} leaves no room for any draft depth"
+        )
+    return best
+
+
 def speedup_table(
     cfg: ModelConfig,
     devices: Sequence[DeviceSpec],

@@ -14,6 +14,12 @@ radix-tree cache (``serving/prefix_cache.py``; requests get a common system
 prompt so hits occur) and ``--prefill-chunk N`` interleaves N-token prefill
 chunks with decode steps — both continuous-scheduler features, on either
 executor.
+
+``--draft-model <zoo-arch> --spec-k N`` turns on speculative decoding
+(``serving/spec.py``): the draft arch proposes N tokens per round on the
+fastest device and the serving executor verifies them in one chunked paged
+prefill — greedy-only, continuous scheduler only, output bitwise-identical
+to plain decoding.
 """
 from __future__ import annotations
 
@@ -79,6 +85,15 @@ def main():
                          "with decode steps instead of stalling live slots "
                          "for a whole long-prompt prefill (continuous "
                          "scheduler only)")
+    ap.add_argument("--draft-model", default=None, metavar="ARCH",
+                    help="speculative decoding (serving/spec.py): a small "
+                         "zoo arch drafts --spec-k tokens per round on the "
+                         "fastest device and the serving executor verifies "
+                         "them in one chunked paged prefill (greedy only, "
+                         "continuous scheduler only)")
+    ap.add_argument("--spec-k", type=int, default=None, metavar="N",
+                    help="draft tokens proposed per speculative round "
+                         "(requires --draft-model)")
     ap.add_argument("--executor", choices=("zoo", "galaxy"), default="zoo",
                     help="zoo = GSPMD model zoo; galaxy = paper-exact HMP "
                          "schedule over all local devices")
@@ -98,6 +113,39 @@ def main():
     if cfg.input_mode != "token":
         raise SystemExit(f"{cfg.name} is a stub-frontend arch; serve the token archs")
 
+    draft_executor = None
+    if (args.draft_model is None) != (args.spec_k is None):
+        raise SystemExit("--draft-model and --spec-k go together")
+    if args.draft_model is not None:
+        if args.scheduler == "wave":
+            raise SystemExit(
+                "--draft-model requires the continuous scheduler: the wave "
+                "path has no paged chunk-prefill to verify drafts with "
+                "(drop --scheduler wave)")
+        if args.temperature != 0.0:
+            raise SystemExit(
+                "--draft-model is greedy-only: verification pins tokens to "
+                "the sequential argmax path (drop --temperature)")
+        from repro.core.costmodel import DeviceSpec
+        from repro.serving import TransformerExecutor, place_draft
+
+        draft_cfg = get_config(args.draft_model)
+        if args.reduce:
+            draft_cfg = reduced(draft_cfg)
+        if draft_cfg.vocab_size != cfg.vocab_size:
+            raise SystemExit(
+                f"draft {draft_cfg.name} vocab {draft_cfg.vocab_size} != "
+                f"target vocab {cfg.vocab_size}")
+        draft_params = init_params(draft_cfg, jax.random.PRNGKey(2))
+        # the draft runs alone on one device; place_draft picks the
+        # highest-FLOPS spec (local devices report uniform capacity, so
+        # this degenerates to index 0 — on a real heterogeneous edge mesh
+        # the DeviceSpecs come from the profiler)
+        specs = [DeviceSpec(str(d), 1.0, 1.0, 1.0) for d in jax.local_devices()]
+        dev = jax.local_devices()[place_draft(specs)]
+        draft_params = jax.device_put(draft_params, dev)
+        draft_executor = TransformerExecutor(draft_params, draft_cfg)
+
     engine_kwargs = dict(
         max_batch=args.max_batch,
         max_len=args.prompt_len + args.max_new,
@@ -106,6 +154,8 @@ def main():
         page_size=args.page_size,
         prefix_cache=args.prefix_cache == "on",
         prefill_chunk=args.prefill_chunk,
+        draft_executor=draft_executor,
+        spec_k=args.spec_k,
     )
     if args.executor == "galaxy":
         engine = ServingEngine(
@@ -137,6 +187,12 @@ def main():
     print(f"served {len(done)} requests in {dt:.2f}s "
           f"({new_tokens} new tokens, {new_tokens/dt:,.1f} tok/s)")
     print(f"stats: {engine.stats}")
+    if args.spec_k is not None:
+        s = engine.stats
+        print(f"speculative: k={args.spec_k} rounds={s['spec_steps']} "
+              f"proposed={s['spec_proposed']} accepted={s['spec_accepted']} "
+              f"acceptance={s['spec_acceptance']:.1%} "
+              f"accept_counts={dict(sorted(s['spec_accept_counts'].items()))}")
     if engine.prefix_stats is not None:
         print(f"prefix cache: {engine.prefix_stats}")
 

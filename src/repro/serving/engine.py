@@ -66,7 +66,8 @@ from repro.models.transformer import apply_model
 from repro.serving.kvcache import cache_page_size, make_cache, map_cache_leaves
 from repro.serving.kvpool import PagedKVPool
 from repro.serving.prefix_cache import PrefixCache
-from repro.serving.sampler import SamplerConfig, sample
+from repro.serving.sampler import SamplerConfig, sample, sample_positions
+from repro.serving.spec import SpeculativeDecoder, run_spec_round
 
 
 @dataclasses.dataclass
@@ -208,9 +209,11 @@ class TransformerExecutor:
         a dense per-request cache view, run the chunk at absolute positions
         [offset, offset + S) attending back to every already-written
         position (earlier chunks and shared prefix pages), and scatter the
-        chunk's KV into its pages.  Returns ``(logits, pool)`` where the
-        logits row is the last *real* prompt token's — meaningful on the
-        chunk that covers position ``length - 1`` (the final one).
+        chunk's KV into its pages.  Returns ``(logits, pool)`` where
+        ``logits`` holds *every* chunk row, (1, S, V): row ``j`` predicts
+        position ``offset + j + 1``.  Chunked prompt prefill reads only the
+        last real prompt token's row; speculative verification
+        (``serving/spec.py``) compares all rows against the draft.
         """
         b, s = tokens.shape
         if b != 1:
@@ -249,8 +252,7 @@ class TransformerExecutor:
                     return leaf.at[phys, within].set(new[0, pos])
 
                 pool = map_cache_leaves(pool, dense, scatter)
-                idx = jnp.clip(length - 1 - offset, 0, s - 1)
-                return logits[:, idx], pool
+                return logits, pool
 
             self._prefill_fns[key] = jax.jit(prefill, donate_argnums=(2,))
         return self._prefill_fns[key](
@@ -343,6 +345,8 @@ class ServingEngine:
         record_times: bool = False,
         prefix_cache: bool = False,
         prefill_chunk: Optional[int] = None,
+        draft_executor=None,
+        spec_k: Optional[int] = None,
     ):
         if executor is None:
             if params is None or cfg is None:
@@ -362,6 +366,33 @@ class ServingEngine:
                 "prefix caching / chunked prefill need an executor with "
                 "the prefill_chunk protocol"
             )
+        if (draft_executor is None) != (spec_k is None):
+            raise ValueError(
+                "speculative decoding needs both draft_executor and spec_k"
+            )
+        if spec_k is not None:
+            if spec_k < 1:
+                raise ValueError("spec_k must be >= 1")
+            if scheduler == "wave":
+                raise ValueError(
+                    "speculative decoding requires the continuous scheduler "
+                    "(the wave path has no paged pool to verify against)"
+                )
+            if sampler.temperature != 0.0:
+                raise ValueError(
+                    "speculative decoding is greedy-only: the verify chunk's "
+                    "per-row argmax is the sequential token only at "
+                    "temperature=0"
+                )
+            if not hasattr(executor, "prefill_chunk"):
+                raise ValueError(
+                    "speculative verification needs the target executor's "
+                    "prefill_chunk protocol"
+                )
+            if not getattr(draft_executor, "supports_paged", False):
+                raise ValueError(
+                    "draft executor must implement the paged protocol"
+                )
         self.executor = executor
         self.max_batch = max_batch
         self.max_len = max_len
@@ -373,11 +404,17 @@ class ServingEngine:
         self.record_times = record_times
         self.prefix_cache = prefix_cache
         self.prefill_chunk = prefill_chunk
+        self.draft_executor = draft_executor
+        self.spec_k = spec_k
         self.queue: deque = deque()
         self.stats = {"prefill_tokens": 0, "decode_steps": 0, "requests": 0,
                       "decode_tokens": 0, "prefill_chunks": 0,
                       "prefix_hits": 0, "cached_prefix_tokens": 0,
-                      "peak_shared_pages": 0}
+                      "peak_shared_pages": 0,
+                      # speculative decoding (serving/spec.py): proposals,
+                      # acceptances, rounds, and accepted-length histogram
+                      "spec_steps": 0, "spec_proposed": 0, "spec_accepted": 0,
+                      "spec_acceptance": 0.0, "spec_accept_counts": {}}
         # post-run introspection (tests / benches / demos)
         self.prefix_stats: Optional[Dict] = None
 
@@ -396,6 +433,11 @@ class ServingEngine:
                     if getattr(self.executor, "supports_paged", False) else "wave")
         if mode == "continuous":
             return self._run_continuous()
+        if self.spec_k is not None:
+            raise ValueError(
+                "speculative decoding requires the continuous scheduler, "
+                "but this executor only supports the wave path"
+            )
         if self.prefix_cache or self.prefill_chunk:
             raise ValueError(
                 "prefix caching / chunked prefill belong to the continuous "
@@ -411,6 +453,13 @@ class ServingEngine:
     def _sample(self, logits):
         self.rng, key = jax.random.split(self.rng)
         return sample(logits, key, self.sampler)
+
+    def _sample_positions(self, logits):
+        """Per-position sampling for the speculative verify chunk.  Greedy
+        (the only mode speculation runs in) consumes no randomness, so the
+        RNG split never perturbs token pinning."""
+        self.rng, key = jax.random.split(self.rng)
+        return sample_positions(logits, key, self.sampler)
 
     def _emit(self, r: Request, token: int, limit: int) -> bool:
         """Append one token; returns True if the request just finished."""
@@ -445,6 +494,15 @@ class ServingEngine:
         storage = ex.make_pool(total_pages, ps)
         pcache = PrefixCache(pool, grain=grain) if self.prefix_cache else None
         self.pool = pool  # introspection (tests / benches)
+        spec = None
+        if self.spec_k is not None:
+            # the draft pool mirrors the target pool's geometry so slot
+            # indices and position arithmetic are shared between the two
+            spec = SpeculativeDecoder(
+                self.draft_executor, self.spec_k, num_slots=n_slots,
+                page_size=ps, pages_per_slot=pages_per_slot,
+            )
+            self.spec = spec  # introspection (tests / benches)
         chunk_tokens = (None if self.prefill_chunk is None
                         else _roundup(self.prefill_chunk, grain))
         slots: List[Optional[_Slot]] = [None] * n_slots
@@ -470,6 +528,9 @@ class ServingEngine:
             else:
                 logits, storage = ex.prefill_chunk(
                     chunk, storage, block_row, offset=off, length=t.s)
+                # chunk logits carry every row; the sampled first token
+                # comes from the last *real* prompt token's row
+                logits = logits[:, max(0, min(t.s - 1 - off, size - 1))]
                 self.stats["prefill_chunks"] += 1
             # count *computed* prompt tokens: suffix-only under prefix hits
             self.stats["prefill_tokens"] += max(0, min(t.s, off + size) - off)
@@ -487,6 +548,9 @@ class ServingEngine:
                 finished.append(t.req)
             else:
                 slots[t.slot] = _Slot(t.req, tok, t.s, t.limit)
+                if spec is not None:
+                    spec.admit(t.slot, t.tokens, t.s,
+                               max_positions=max(t.s_pad, t.s + t.limit))
             return True
 
         def admit() -> None:
@@ -563,7 +627,16 @@ class ServingEngine:
                 if prefill_step(prefills[0]):
                     prefills.popleft()
             live = [i for i, sl in enumerate(slots) if sl is not None]
-            if live:
+            if live and spec is not None:
+                # speculative round: draft proposes (batched), the target
+                # verifies each slot's proposals in one chunk prefill,
+                # rejections roll back by block-table truncation
+                storage, done = run_spec_round(
+                    self, spec, slots, live, pool, storage)
+                for i, req in done:
+                    slots[i] = None
+                    finished.append(req)
+            elif live:
                 tokens = np.zeros((n_slots, 1), np.int32)
                 positions = np.zeros(n_slots, np.int32)
                 live_mask = np.zeros(n_slots, bool)
@@ -592,6 +665,10 @@ class ServingEngine:
                         sl.last_token = int(toks[i])
                         sl.next_index += 1
             admit()  # freed slots refill immediately — continuous batching
+        if spec is not None:
+            self.stats["spec_acceptance"] = (
+                self.stats["spec_accepted"] / self.stats["spec_proposed"]
+                if self.stats["spec_proposed"] else 0.0)
         if pcache is not None:
             pool.check()  # final refcount-algebra validation for the run
             self.prefix_stats = pcache.stats()

@@ -162,8 +162,11 @@ class GalaxyHMPExecutor:
         Galaxy schedule, attending back to the pages already written by the
         shared prefix and earlier chunks (``hmp_prefill(offset=)`` gathers
         the block row as attention context inside the shard_map).
-        Returns ``(logits, pool)`` with the logits row at the last real
-        prompt token — meaningful on the chunk covering ``length - 1``."""
+        Returns ``(logits, pool)`` with *every* chunk row's logits,
+        (1, S, V): row ``j`` predicts position ``offset + j + 1``.  Chunked
+        prompt prefill reads only the last real prompt token's row;
+        speculative verification (``serving/spec.py``) compares all rows
+        against the draft proposals."""
         b, s = tokens.shape
         key = ("chunk", s)
         if key not in self._prefill_fns:
@@ -180,8 +183,7 @@ class GalaxyHMPExecutor:
                     seq=s, block_row=block_row, offset=offset,
                 )
                 y = layout.gather(y)
-                idx = jnp.clip(length - 1 - offset, 0, s - 1)
-                logits = y[:, idx] @ embed.T
+                logits = y @ embed.T  # (1, S, V): all chunk rows
                 return logits, pool
 
             self._prefill_fns[key] = jax.jit(prefill, donate_argnums=(3,))

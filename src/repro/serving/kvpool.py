@@ -177,6 +177,28 @@ class PagedKVPool:
                 )
             self._take_page(slot)
 
+    def truncate(self, slot: int, positions: int) -> List[int]:
+        """Roll a slot back so it holds exactly ``pages_for(positions)``
+        pages, releasing the tail pages (speculative-decoding rejection:
+        pages ``ensure``-d for draft tokens the verifier refused).  The
+        reservation is untouched — it is a worst-case bound and the slot
+        may still grow back to it.  Tail pages are always slot-private
+        (they lie beyond the prompt, hence beyond any shared prefix), so
+        the refcount release frees them immediately unless pinned.
+        Returns the pages released."""
+        if not self.active[slot]:
+            raise ValueError(f"slot {slot} is not active")
+        keep = self.pages_for(positions)
+        row = self._allocated[slot]
+        if keep >= len(row):
+            return []
+        dropped = row[keep:]
+        for page in reversed(dropped):
+            self._release(page)
+        self._allocated[slot] = row[:keep]
+        self.block_table[slot, keep:] = NULL_PAGE
+        return dropped
+
     def retire(self, slot: int) -> List[int]:
         """Drop the slot's page references; zero its row.  Returns the pages
         the slot held — each goes back to the free list only if this was its

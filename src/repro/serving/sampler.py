@@ -24,3 +24,20 @@ def sample(logits, rng, cfg: SamplerConfig):
         cutoff = vals[:, -1:]
         logits = jnp.where(logits >= cutoff, logits, -1e30)
     return jax.random.categorical(rng, logits, axis=-1).astype(jnp.int32)
+
+
+def sample_positions(logits, rng, cfg: SamplerConfig):
+    """Sample every position of a (B, K, V) logits block -> (B, K) int32.
+
+    The speculative verify step scores all K draft positions in one chunk
+    prefill and needs a token per position.  Each position draws from its
+    own split of ``rng`` so the stream matches K sequential ``sample``
+    calls in distribution; at ``temperature == 0`` this reduces exactly to
+    per-position argmax (no RNG consumed), which is what pins speculative
+    greedy output to the non-speculative path."""
+    b, k, v = logits.shape
+    if cfg.temperature == 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    keys = jax.random.split(rng, k)
+    cols = [sample(logits[:, j], keys[j], cfg) for j in range(k)]
+    return jnp.stack(cols, axis=1)

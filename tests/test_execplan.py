@@ -836,23 +836,18 @@ def test_ring_tile_size_validation():
             else:
                 raise SystemExit('expected ValueError for non-dividing seq')
 
-        # a schedule whose pad_tile disagrees with the shapes is rejected,
-        # and so is the deprecated tile_size= spelling of the same mistake
+        # a schedule whose pad_tile disagrees with the shapes is rejected
         h2 = jax.random.normal(jax.random.PRNGKey(0), (1, 32, 16))
         bad4 = ring.RingSchedule.dense(4, 4)
-        import warnings
-        for kw in ({'schedule': bad4}, {'tile_size': 4}):
-            try:
-                with warnings.catch_warnings():
-                    warnings.simplefilter('ignore', DeprecationWarning)
-                    shard_map(lambda hl, wl: ring.matmul_ring_reducescatter(
-                                  hl, wl, 'model', **kw), mesh=mesh,
-                              in_specs=(P(None, None, 'model'), P('model', None)),
-                              out_specs=P(None, 'model', None))(h2, w)
-            except ValueError as e:
-                print('ok:', type(e).__name__)
-            else:
-                raise SystemExit('expected ValueError for wrong tile size')
+        try:
+            shard_map(lambda hl, wl: ring.matmul_ring_reducescatter(
+                          hl, wl, 'model', schedule=bad4), mesh=mesh,
+                      in_specs=(P(None, None, 'model'), P('model', None)),
+                      out_specs=P(None, 'model', None))(h2, w)
+        except ValueError as e:
+            print('ok:', type(e).__name__)
+        else:
+            raise SystemExit('expected ValueError for wrong tile size')
 
         # hmp_layer under a plan rejects a non-dividing sequence up front
         ep = ExecPlan.even(4, num_heads=8, d_ff=32, head_dim=4, d_model=32)

@@ -11,8 +11,6 @@ bucketed with double-buffered tile overlap — and asserts the bucketed
 variants are *bitwise* equal to the padded ring (same summation order, pad
 rows zero either way), which in turn matches the sync reference.
 """
-import warnings
-
 import numpy as np
 import pytest
 
@@ -116,45 +114,28 @@ def test_ragged_reducescatter_matches_sync(tiles, seed):
         assert np.array_equal(np.asarray(out_v), np.asarray(out_ring)), kw
 
 
-def test_legacy_kwargs_warn_and_match():
-    """The deprecated tile_size=/valid_sizes= signature still runs (shim),
-    warns, and is bitwise-identical to the schedule it resolves to."""
-    layout = SeqLayout((2, 0, 3, 1))
-    n, t = layout.num_devices, layout.pad_tile
-    x = jax.random.normal(jax.random.PRNGKey(0), (n, BATCH, t, D_MODEL))
-    w = jax.random.normal(jax.random.PRNGKey(1), (n, D_MODEL, F_LOC))
-    new = _ring_over(ring.ring_allgather_matmul, _schedule(layout))(x, w)
-    with pytest.warns(DeprecationWarning, match="RingSchedule"):
-        old = jax.vmap(
-            lambda a, b: ring.ring_allgather_matmul(
-                a, b, "ring", tile_size=t, valid_sizes=layout.tiles),
-            axis_name="ring",
-        )(x, w)
-    assert np.array_equal(np.asarray(old), np.asarray(new))
-
-
-def test_valid_sizes_validation():
+def test_schedule_validation_at_call():
+    """Trace-time geometry checks of the schedule-only signatures."""
     x = jnp.zeros((1, 4, D_MODEL))
     w = jnp.zeros((D_MODEL, F_LOC))
-    with warnings.catch_warnings():
-        warnings.simplefilter("ignore", DeprecationWarning)
-        with pytest.raises(ValueError, match="valid_sizes"):
-            jax.vmap(
-                lambda a, b: ring.ring_allgather_matmul(
-                    a, b, "ring", valid_sizes=(1, 2, 3)),  # 3 sizes, 2 devices
-                axis_name="ring",
-            )(jnp.stack([x, x]), jnp.stack([w, w]))
-        with pytest.raises(ValueError, match="tile_size"):
-            jax.vmap(
-                lambda a, b: ring.ring_allgather_matmul(
-                    a, b, "ring", valid_sizes=(5, 2)),  # 5 > tile of 4
-                axis_name="ring",
-            )(jnp.stack([x, x]), jnp.stack([w, w]))
-    # mixing the schedule with legacy kwargs is an error, not a silent pick
-    with pytest.raises(ValueError, match="not both"):
+    with pytest.raises(ValueError, match="devices"):
         jax.vmap(
             lambda a, b: ring.ring_allgather_matmul(
-                a, b, "ring", schedule=RingSchedule.dense(2, 4),
-                valid_sizes=(4, 4)),
-            axis_name="ring",
+                a, b, "ring",
+                schedule=RingSchedule.ragged((1, 2, 3), pad_tile=4)),
+            axis_name="ring",  # 3-device schedule on a 2-device ring
         )(jnp.stack([x, x]), jnp.stack([w, w]))
+    with pytest.raises(ValueError, match="pad_tile"):
+        jax.vmap(
+            lambda a, b: ring.ring_allgather_matmul(
+                a, b, "ring", schedule=RingSchedule.dense(2, 8)),
+            axis_name="ring",  # pad_tile 8 vs local tile of 4
+        )(jnp.stack([x, x]), jnp.stack([w, w]))
+    with pytest.raises(ValueError, match="does not divide"):
+        # no schedule and a non-dividing sequence: the dense default cannot
+        # cover it — callers must bring a ragged layout
+        jax.vmap(
+            lambda a, b: ring.matmul_ring_reducescatter(
+                a, b, "ring"),
+            axis_name="ring",
+        )(jnp.zeros((2, 1, 5, F_LOC)), jnp.zeros((2, F_LOC, D_MODEL)))

@@ -1,5 +1,5 @@
-"""RingSchedule API: construction, wire accounting, deprecation shims, and
-the decode-attention valid-head gather.
+"""RingSchedule API: construction, wire accounting, the schedule-only
+primitive signatures, and the decode-attention valid-head gather.
 
 These run on a single device: the ring primitives only need a named axis
 (``jax.vmap(axis_name=...)``), and the schedule itself is pure host-side
@@ -63,50 +63,31 @@ def test_schedule_validation():
         RingSchedule((TileSpec(1, 2, 2),), pad_tile=4)  # owner != position
 
 
-# --- deprecation shims --------------------------------------------------------
+# --- schedule-only signatures -------------------------------------------------
 
 def _vmapped(fn, **kw):
     return jax.vmap(lambda a, b: fn(a, b, "ring", **kw), axis_name="ring")
-
-
-@pytest.mark.parametrize("fn", [ring.ring_allgather_matmul,
-                                ring.sync_allgather_matmul])
-def test_ring_kwargs_deprecated_but_bitwise(fn):
-    tiles, pad = (3, 1, 4, 2), 4
-    x = jax.random.normal(jax.random.PRNGKey(0), (4, 2, pad, D_MODEL))
-    w = jax.random.normal(jax.random.PRNGKey(1), (4, D_MODEL, F_LOC))
-    sched = RingSchedule.ragged(tiles, pad_tile=pad)
-    new = _vmapped(fn, schedule=sched)(x, w)
-    with pytest.warns(DeprecationWarning, match="next release"):
-        old = _vmapped(fn, tile_size=pad, valid_sizes=tiles)(x, w)
-    assert np.array_equal(np.asarray(old), np.asarray(new))
 
 
 def test_plain_dense_call_does_not_warn():
     x = jnp.ones((2, 1, 4, D_MODEL))
     w = jnp.ones((2, D_MODEL, F_LOC))
     with warnings.catch_warnings():
-        warnings.simplefilter("error", DeprecationWarning)
+        warnings.simplefilter("error")
         _vmapped(ring.ring_allgather_matmul)(x, w)
 
 
-def test_hmp_paged_shims_forward_and_warn(monkeypatch):
-    seen = {}
-    monkeypatch.setattr(hmp, "hmp_prefill",
-                        lambda *a, **k: seen.setdefault("prefill", (a, k)))
-    monkeypatch.setattr(hmp, "hmp_decode",
-                        lambda *a, **k: seen.setdefault("decode", (a, k)))
-    with pytest.warns(DeprecationWarning, match="hmp_prefill"):
-        hmp.hmp_prefill_paged("L", "x", "mesh", "pool", "row", plan="ep",
-                              overlap=True, seq=8, offset=4)
-    with pytest.warns(DeprecationWarning, match="hmp_decode"):
-        hmp.hmp_decode_paged("L", "x", "mesh", "pool", "bt", "pos", plan="ep")
-    a, k = seen["prefill"]
-    assert a == ("L", "x", "mesh", "pool")
-    assert k == dict(plan="ep", overlap=True, seq=8, block_row="row", offset=4)
-    a, k = seen["decode"]
-    assert a == ("L", "x", "mesh", "pool", "pos")
-    assert k == dict(plan="ep", block_table="bt")
+def test_legacy_kwargs_removed():
+    """The PR-6 shims are gone: the pre-schedule keywords now fail like any
+    unknown keyword, and the removed hmp paged names no longer exist."""
+    x = jnp.ones((2, 1, 4, D_MODEL))
+    w = jnp.ones((2, D_MODEL, F_LOC))
+    with pytest.raises(TypeError, match="tile_size"):
+        _vmapped(ring.ring_allgather_matmul, tile_size=4)(x, w)
+    with pytest.raises(TypeError, match="valid_sizes"):
+        _vmapped(ring.sync_allgather_matmul, valid_sizes=(4, 4))(x, w)
+    assert not hasattr(hmp, "hmp_prefill_paged")
+    assert not hasattr(hmp, "hmp_decode_paged")
 
 
 # --- decode attention: valid-head page gather ---------------------------------

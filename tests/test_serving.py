@@ -3,8 +3,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.models import apply_model, init_params
-from repro.serving import Request, SamplerConfig, ServingEngine, cache_bytes, make_cache
-from repro.serving.sampler import sample
+from repro.serving import Request, ServingEngine, cache_bytes, make_cache
 
 from helpers import smoke_cfg
 
@@ -116,13 +115,6 @@ def test_continuous_records_token_times():
     r = eng.run()[0]
     assert len(r.token_times) == len(r.output)
     assert all(b >= a for a, b in zip(r.token_times, r.token_times[1:]))
-
-
-def test_samplers():
-    logits = jnp.asarray([[0.0, 5.0, 1.0]])
-    assert int(sample(logits, jax.random.PRNGKey(0), SamplerConfig())[0]) == 1
-    t = sample(logits, jax.random.PRNGKey(0), SamplerConfig(temperature=1.0, top_k=2))
-    assert int(t[0]) in (1, 2)
 
 
 def test_cache_bytes_scaling():

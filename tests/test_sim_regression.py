@@ -20,7 +20,7 @@ from repro.configs import get_config
 from repro.core import costmodel, planner
 from repro.core.execplan import ExecPlan
 from repro.core.profiler import AnalyticProfiler
-from repro.core.simulator import simulate_execplan
+from repro.core.simulator import simulate_execplan, spec_decode_summary
 
 GOLDEN = os.path.join(os.path.dirname(__file__), "golden", "sim_latency.json")
 TOLERANCE = 0.20
@@ -109,6 +109,12 @@ def _score(eplan, cfg, devices, link, seq):
         "prefix_hit_us": simulate_execplan(
             eplan, cfg, devices, link, seq, overlap=True,
             cached_prefix=seq // 2).latency * 1e6,
+        # one speculative round (serving/spec.py) at the canonical operating
+        # point: k=4 drafts on the fastest device + a 5-row verify chunk,
+        # expressed as modeled time per emitted token at 80% acceptance
+        "spec_decode_us": spec_decode_summary(
+            eplan, cfg, devices, link, draft_cfg=cfg, k=4,
+            acceptance=0.8, context_len=seq)["time_per_token_spec"] * 1e6,
     }
 
 

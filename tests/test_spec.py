@@ -1,0 +1,300 @@
+"""Speculative decoding (``serving/spec.py``): acceptance arithmetic,
+draft placement, rollback via block-table truncation, the engine-level
+token-pinning contract on both executors, and the verify-chunk pricing.
+
+The multi-device test runs the 4-device uneven 3:2:2:1 Galaxy plan in a
+subprocess (pattern per test_execplan.py) with the pool invariants checked
+after every speculative round.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.costmodel import DeviceSpec, spec_expected_tokens
+from repro.serving import (
+    PagedKVPool, Request, ServingEngine, TransformerExecutor,
+    longest_accepted_prefix, place_draft,
+)
+
+from helpers import smoke_cfg
+from test_execplan import run_multidevice
+
+
+def init_params_for(cfg, seed):
+    from repro.models import init_params
+    return init_params(cfg, jax.random.PRNGKey(seed))
+
+
+# --- pure arithmetic ---------------------------------------------------------
+
+def test_longest_accepted_prefix():
+    assert longest_accepted_prefix([], []) == 0
+    assert longest_accepted_prefix([5, 6, 7], [5, 6, 7]) == 3
+    assert longest_accepted_prefix([5, 6, 7], [5, 9, 7]) == 1
+    assert longest_accepted_prefix([5, 6], [8, 6]) == 0
+    # verified may be longer (the verify chunk carries the bonus row)
+    assert longest_accepted_prefix([5, 6], [5, 6, 7]) == 2
+    assert longest_accepted_prefix([np.int32(5)], jnp.asarray([5, 2])) == 1
+
+
+def test_place_draft_picks_fastest():
+    devs = [DeviceSpec("a", 2e9, 1e9, 1e9), DeviceSpec("b", 7e9, 1e9, 1e9),
+            DeviceSpec("c", 3e9, 1e9, 1e9)]
+    assert place_draft(devs) == 1
+    assert place_draft(devs[:1]) == 0
+    with pytest.raises(ValueError):
+        place_draft([])
+
+
+def test_spec_expected_tokens():
+    assert spec_expected_tokens(0.0, 4) == 1.0
+    assert spec_expected_tokens(1.0, 4) == 5.0
+    # geometric partial sum: 1 + a + ... + a^k
+    a, k = 0.7, 3
+    assert spec_expected_tokens(a, k) == pytest.approx(
+        sum(a ** j for j in range(k + 1)))
+    # monotone in both arguments
+    assert spec_expected_tokens(0.9, 4) > spec_expected_tokens(0.5, 4)
+    assert spec_expected_tokens(0.5, 6) > spec_expected_tokens(0.5, 2)
+    with pytest.raises(ValueError):
+        spec_expected_tokens(1.5, 4)
+    with pytest.raises(ValueError):
+        spec_expected_tokens(0.5, 0)
+
+
+# --- rollback: PagedKVPool.truncate ------------------------------------------
+
+def test_kvpool_truncate_releases_tail_pages():
+    pool = PagedKVPool(num_pages=9, page_size=4, num_slots=2, pages_per_slot=4)
+    pool.admit(0, initial_positions=6, max_positions=16)  # 2 pages up front
+    for p in range(6, 12):
+        pool.ensure(0, p)                                 # grows to 3 pages
+    assert len(pool.block_table[0].nonzero()[0]) == 3
+    free_before = pool.free_pages
+    dropped = pool.truncate(0, 7)                         # back to 2 pages
+    assert len(dropped) == 1
+    assert pool.free_pages == free_before + 1
+    assert list(pool.block_table[0, 2:]) == [0, 0, 0, 0] or \
+        bool(np.all(pool.block_table[0, 2:] == 0))
+    pool.check()
+    # no-op when the slot already holds <= pages_for(positions)
+    assert pool.truncate(0, 8) == []
+    pool.check()
+    # the reservation is untouched: the slot can grow back
+    pool.ensure(0, 15)
+    pool.check()
+    with pytest.raises(ValueError):
+        pool.truncate(1, 0)  # idle slot
+
+
+def test_kvpool_truncate_respects_shared_refcounts():
+    pool = PagedKVPool(num_pages=9, page_size=4, num_slots=2, pages_per_slot=4)
+    pool.admit(0, initial_positions=8, max_positions=8)
+    shared = list(pool._allocated[0])
+    pool.pin(shared[1])  # a prefix-tree reference to the slot's 2nd page
+    free_before = pool.free_pages
+    dropped = pool.truncate(0, 4)
+    assert dropped == [shared[1]]
+    # still pinned: reference dropped but the page must NOT hit the free list
+    assert pool.free_pages == free_before
+    assert pool.refcount[shared[1]] == 1
+    pool.check()
+    assert pool.unpin(shared[1])  # last reference -> freed now
+    pool.check()
+
+
+# --- engine contract: spec tokens == plain tokens (zoo executor) -------------
+
+def _requests():
+    return [
+        Request(uid=i, prompt=[1 + (i * 7 + j) % 200 for j in range(6 + 2 * i)],
+                max_new_tokens=9 if i % 2 == 0 else 3)
+        for i in range(5)
+    ]
+
+
+def test_spec_matches_plain_on_transformer_executor():
+    """Greedy tokens bitwise identical spec on/off, with an *independent*
+    draft model (hostile case: frequent rejections exercise rollback)."""
+    cfg = smoke_cfg("qwen1.5-0.5b")
+    target = TransformerExecutor(init_params_for(cfg, 0), cfg)
+    draft = TransformerExecutor(init_params_for(cfg, 9), cfg)  # unrelated
+
+    def run(spec_on):
+        eng = ServingEngine(
+            executor=target, max_batch=3, max_len=32,
+            scheduler="continuous", page_size=4,
+            draft_executor=draft if spec_on else None,
+            spec_k=4 if spec_on else None)
+        for r in _requests():
+            eng.submit(r)
+        return {r.uid: tuple(r.output) for r in eng.run()}, eng.stats
+
+    plain, _ = run(False)
+    spec, stats = run(True)
+    assert plain == spec
+    assert stats["spec_steps"] > 0
+    assert 0 <= stats["spec_accepted"] <= stats["spec_proposed"]
+    # the budget cap keeps every round's proposals within the remaining
+    # output budget minus the verifier's own token
+    assert sum(stats["spec_accept_counts"].values()) == stats["spec_steps"]
+    assert stats["spec_acceptance"] == pytest.approx(
+        stats["spec_accepted"] / max(stats["spec_proposed"], 1))
+
+
+def test_spec_identical_draft_accepts_everything():
+    """Draft == target: every proposal is accepted (acceptance 100%), and
+    rounds emit k+1 tokens until the budget cap bites."""
+    cfg = smoke_cfg("qwen1.5-0.5b")
+    target = TransformerExecutor(init_params_for(cfg, 0), cfg)
+    draft = TransformerExecutor(init_params_for(cfg, 0), cfg)
+
+    eng = ServingEngine(executor=target, max_batch=1, max_len=32,
+                        scheduler="continuous", page_size=4,
+                        draft_executor=draft, spec_k=3)
+    eng.submit(Request(uid=0, prompt=[1, 2, 3, 4, 5, 6], max_new_tokens=8))
+    done = eng.run()
+    assert len(done[0].output) == 8
+    assert eng.stats["spec_accepted"] == eng.stats["spec_proposed"] > 0
+    assert eng.stats["spec_acceptance"] == 1.0
+
+    ref = ServingEngine(executor=target, max_batch=1, max_len=32,
+                        scheduler="continuous", page_size=4)
+    ref.submit(Request(uid=0, prompt=[1, 2, 3, 4, 5, 6], max_new_tokens=8))
+    assert ref.run()[0].output == done[0].output
+
+
+def test_spec_engine_validation():
+    cfg = smoke_cfg("qwen1.5-0.5b")
+    from repro.serving import SamplerConfig
+    params = init_params_for(cfg, 0)
+    ex = TransformerExecutor(params, cfg)
+    with pytest.raises(ValueError, match="both draft_executor and spec_k"):
+        ServingEngine(executor=ex, max_batch=1, max_len=16, spec_k=4)
+    with pytest.raises(ValueError, match="both draft_executor and spec_k"):
+        ServingEngine(executor=ex, max_batch=1, max_len=16, draft_executor=ex)
+    with pytest.raises(ValueError, match="continuous"):
+        ServingEngine(executor=ex, max_batch=1, max_len=16, scheduler="wave",
+                      draft_executor=ex, spec_k=4)
+    with pytest.raises(ValueError, match="greedy-only"):
+        ServingEngine(executor=ex, max_batch=1, max_len=16,
+                      sampler=SamplerConfig(temperature=0.8),
+                      draft_executor=ex, spec_k=4)
+    with pytest.raises(ValueError, match="spec_k must be >= 1"):
+        ServingEngine(executor=ex, max_batch=1, max_len=16,
+                      draft_executor=ex, spec_k=0)
+
+
+# --- pricing (core/simulator) ------------------------------------------------
+
+def test_spec_decode_summary_and_choose_k():
+    import dataclasses
+
+    from repro.configs import get_config
+    from repro.core import planner
+    from repro.core.execplan import ExecPlan
+    from repro.core.profiler import AnalyticProfiler
+    from repro.core.simulator import choose_spec_k, spec_decode_summary
+    from repro.core import costmodel
+
+    cfg = dataclasses.replace(get_config("distilbert"), num_layers=1)
+    devices = costmodel.edge_env("C")
+    link = costmodel.mbps(1000)
+    prof = AnalyticProfiler(cfg, 128)
+    pl = planner.plan(prof.model_profile(), prof.device_profiles(devices))
+    ep = ExecPlan.from_plan(pl, head_dim=cfg.head_dim, d_model=cfg.d_model)
+    # a draft 1/10th the width should make speculation profitable
+    draft_cfg = dataclasses.replace(cfg, d_ff=cfg.d_ff // 4)
+
+    s = spec_decode_summary(ep, cfg, devices, link, draft_cfg=draft_cfg,
+                            k=4, acceptance=0.8, context_len=128)
+    assert s["expected_tokens"] == pytest.approx(spec_expected_tokens(0.8, 4))
+    assert s["t_verify"] > s["t_decode"] > 0  # 5 rows cost more than 1
+    assert s["t_draft"] < s["t_decode"]
+    assert s["speedup"] == pytest.approx(
+        s["time_per_token_plain"] / s["time_per_token_spec"])
+    # perfect drafts only help; zero acceptance can only hurt
+    hi = spec_decode_summary(ep, cfg, devices, link, draft_cfg=draft_cfg,
+                             k=4, acceptance=1.0, context_len=128)
+    lo = spec_decode_summary(ep, cfg, devices, link, draft_cfg=draft_cfg,
+                             k=4, acceptance=0.0, context_len=128)
+    assert hi["speedup"] > 1.0 > lo["speedup"]
+
+    best = choose_spec_k(ep, cfg, devices, link, draft_cfg=draft_cfg,
+                         acceptance=0.8, context_len=128, k_max=8)
+    assert 1 <= best["k"] <= 8
+    for k in (1, 2, 4, 8):
+        s_k = spec_decode_summary(ep, cfg, devices, link, draft_cfg=draft_cfg,
+                                  k=k, acceptance=0.8, context_len=128)
+        assert best["speedup"] >= s_k["speedup"]
+
+    with pytest.raises(ValueError, match="context_len"):
+        spec_decode_summary(ep, cfg, devices, link, draft_cfg=draft_cfg,
+                            k=4, acceptance=0.8, context_len=5)
+
+
+# --- 4-device uneven Galaxy plan: rollback + invariants ----------------------
+
+def test_spec_galaxy_uneven_4dev_with_rollback():
+    """The acceptance bar: a 4-device uneven 3:2:2:1 Galaxy plan verifying
+    a single-device draft's proposals, with >= 1 rejection exercising the
+    rollback path and ``PagedKVPool.check()`` passing on both pools after
+    every speculative round.  Greedy tokens must be bitwise identical to
+    the non-speculative run."""
+    run_multidevice("""
+    import jax, jax.numpy as jnp, numpy as np
+    from repro.core import hmp
+    from repro.core.execplan import ExecPlan
+    from repro.launch.mesh import make_mesh_compat
+    from repro.configs import get_config, reduced
+    from repro.models import init_params
+    import repro.serving.engine as eng_mod
+    from repro.serving import (GalaxyHMPExecutor, Request, ServingEngine,
+                               TransformerExecutor)
+
+    ep = ExecPlan(heads=(6, 4, 4, 2), columns=(24, 16, 16, 8),
+                  head_dim=2, d_model=32, seq_shares=(3.0, 2.0, 2.0, 1.0))
+    mesh = make_mesh_compat((4,), ('model',))
+    layers = hmp.init_stack_params(jax.random.PRNGKey(0), 2, 32, 16, 64)
+    emb = jax.random.normal(jax.random.PRNGKey(7), (300, 32)) * 0.5
+    target = GalaxyHMPExecutor(layers, emb, ep, mesh)
+
+    dcfg = reduced(get_config('qwen1.5-0.5b'))  # vocab 512 covers the 300
+    draft = TransformerExecutor(init_params(dcfg, jax.random.PRNGKey(3)), dcfg)
+
+    # check the refcount algebra on BOTH pools after every spec round
+    orig = eng_mod.run_spec_round
+    rounds = [0]
+    def checked(engine, spec, slots, live, pool, storage):
+        out = orig(engine, spec, slots, live, pool, storage)
+        pool.check()
+        spec.pool.check()
+        rounds[0] += 1
+        return out
+    eng_mod.run_spec_round = checked
+
+    def run(spec_on):
+        eng = ServingEngine(executor=target, max_batch=2, max_len=40,
+                            scheduler='continuous', page_size=8,
+                            draft_executor=draft if spec_on else None,
+                            spec_k=4 if spec_on else None)
+        for i in range(5):
+            eng.submit(Request(
+                uid=i, prompt=[1 + (i * 5 + j) % 250 for j in range(6 + 3 * i)],
+                max_new_tokens=10 if i % 2 == 0 else 4))
+        return {r.uid: tuple(r.output) for r in eng.run()}, eng.stats
+
+    plain, _ = run(False)
+    spec_out, stats = run(True)
+    assert plain == spec_out, f'tokens diverged: {plain} vs {spec_out}'
+    # spec_steps counts per-slot verify chunks; a batched round covers
+    # up to max_batch of them
+    assert 0 < rounds[0] <= stats['spec_steps'] <= 2 * rounds[0]
+    assert stats['spec_proposed'] > stats['spec_accepted'] > 0, (
+        'need at least one rejection AND one acceptance, got '
+        f"{stats['spec_accepted']}/{stats['spec_proposed']}")
+    assert stats['spec_accept_counts'].get(0, 0) >= 1 or any(
+        c < 4 for c in stats['spec_accept_counts']), 'rollback never ran'
+    print('ok', stats['spec_acceptance'], stats['spec_accept_counts'])
+    """, devices=4)
