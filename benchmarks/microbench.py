@@ -603,9 +603,9 @@ def continuous_vs_wave() -> Iterator[Row]:
     """
     import statistics
 
-    from benchmarks.run import ttft_percentiles
     from repro.configs import get_config, reduced
     from repro.models import init_params
+    from repro.obs import itl_seconds, ttft_percentiles
     from repro.serving import Request, ServingEngine
 
     cfg = reduced(get_config("qwen1.5-0.5b"))
@@ -639,9 +639,7 @@ def continuous_vs_wave() -> Iterator[Row]:
         run_once(scheduler, timed=False)  # warm the jit caches
         done, wall, stats = run_once(scheduler, timed=True)
         toks = sum(len(r.output) for r in done)
-        gaps = []
-        for r in done:
-            gaps.extend(np.diff(r.token_times))
+        gaps = itl_seconds(done)  # the one shared ITL definition (repro.obs)
         results[scheduler] = (wall, toks, stats["decode_steps"], gaps)
         outputs[scheduler] = {r.uid: tuple(r.output) for r in done}
         done_by[scheduler] = done
@@ -681,9 +679,9 @@ def prefix_sharing() -> Iterator[Row]:
        by ``PagedKVPool.check()`` on every sharing admission.
     3. Greedy tokens are identical cache on vs off (the engine contract).
     """
-    from benchmarks.run import ttft_percentiles
     from repro.configs import get_config, reduced
     from repro.models import init_params
+    from repro.obs import ttft_percentiles
     from repro.serving import Request, ServingEngine, TransformerExecutor
 
     cfg = reduced(get_config("qwen1.5-0.5b"))
@@ -919,7 +917,131 @@ def spec_decode() -> Iterator[Row]:
            f"accept_counts={counts}")
 
 
+def serving_telemetry() -> Iterator[Row]:
+    """Serving observability (``repro.obs``): what telemetry costs and
+    whether the exported trace is faithful.
+
+    Acceptance gates (raise, not assert — they must also gate under -O):
+
+    1. Structural zero overhead when disabled: a serve run with no tracer
+       and ``record_times=False`` executes **zero** ``Tracer`` calls and
+       zero ``Histogram.observe`` calls (counted by patching the classes)
+       — the disabled path is a per-token no-op by construction, not
+       merely "fast enough on this host".
+    2. Greedy tokens are bitwise identical telemetry on vs off (the
+       engine contract — tracing must not perturb the RNG path).
+    3. Trace fidelity: the Chrome trace exports with no open spans and the
+       per-request phase spans cover >= 95 % of every request's
+       submit→retire wall time.
+
+    With ``TELEMETRY_ARTIFACT_DIR`` set (the CI bench-smoke job), writes
+    ``telemetry-trace.json`` + ``telemetry-metrics.json`` there for
+    artifact upload.
+    """
+    import json as _json
+
+    from repro.configs import get_config, reduced
+    from repro.models import init_params
+    from repro.obs import Tracer
+    from repro.obs import metrics as obs_metrics
+    from repro.obs import trace as obs_trace
+    from repro.serving import Request, ServingEngine, TransformerExecutor
+
+    cfg = reduced(get_config("qwen1.5-0.5b"))
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    executor = TransformerExecutor(params, cfg)  # shared jit caches
+
+    def requests():
+        return [
+            Request(uid=i, prompt=[1 + (i * 7 + j) % 200 for j in range(8)],
+                    max_new_tokens=24 if i % 4 == 0 else 6)
+            for i in range(8)
+        ]
+
+    def run_once(tracer=None, record_times=False):
+        eng = ServingEngine(executor=executor, max_batch=4, max_len=48,
+                            scheduler="continuous", page_size=8,
+                            record_times=record_times, tracer=tracer)
+        for r in requests():
+            eng.submit(r)
+        t0 = time.perf_counter()
+        done = eng.run()
+        wall = time.perf_counter() - t0
+        return eng, done, wall
+
+    run_once()  # warm the jit caches
+
+    # gate 1: count every tracer / histogram-observe invocation while the
+    # disabled engine serves the full mix
+    calls = {"n": 0}
+
+    def counting(fn):
+        def wrapped(*a, **k):
+            calls["n"] += 1
+            return fn(*a, **k)
+        return wrapped
+
+    patched = [(obs_trace.Tracer, m) for m in ("begin", "end", "instant")]
+    patched.append((obs_metrics.Histogram, "observe"))
+    originals = [(cls, name, getattr(cls, name)) for cls, name in patched]
+    for cls, name, orig in originals:
+        setattr(cls, name, counting(orig))
+    try:
+        _, done_off, wall_off = run_once()
+    finally:
+        for cls, name, orig in originals:
+            setattr(cls, name, orig)
+    if calls["n"] != 0:
+        raise RuntimeError(
+            f"disabled telemetry executed {calls['n']} tracer/histogram "
+            f"calls — the off path must be a structural no-op"
+        )
+
+    tracer = Tracer()
+    eng_on, done_on, wall_on = run_once(tracer=tracer, record_times=True)
+    if ({r.uid: tuple(r.output) for r in done_off}
+            != {r.uid: tuple(r.output) for r in done_on}):
+        raise RuntimeError("greedy tokens diverged telemetry on vs off")
+
+    obj = tracer.to_json()  # raises if any span is still open
+    spans = [e for e in obj["traceEvents"] if e.get("ph") == "X"]
+    names = {e["tid"]: e["args"]["name"] for e in obj["traceEvents"]
+             if e.get("ph") == "M" and e["name"] == "thread_name"}
+    coverage = []
+    for r in done_on:
+        tid = next(t for t, n in names.items() if n == f"req {r.uid}")
+        track = [e for e in spans if e["tid"] == tid]
+        lo = min(e["ts"] for e in track)
+        hi = max(e["ts"] + e["dur"] for e in track)
+        coverage.append(sum(e["dur"] for e in track) / (hi - lo) if hi > lo
+                        else 1.0)
+    min_cov = min(coverage)
+    if min_cov < 0.95:
+        raise RuntimeError(
+            f"request phase spans cover only {min_cov:.1%} of submit->retire"
+        )
+
+    out_dir = os.environ.get("TELEMETRY_ARTIFACT_DIR")
+    if out_dir:
+        with open(os.path.join(out_dir, "telemetry-trace.json"), "w") as f:
+            _json.dump(obj, f)
+        with open(os.path.join(out_dir, "telemetry-metrics.json"), "w") as f:
+            _json.dump(eng_on.metrics.snapshot(), f, indent=2, default=float)
+
+    toks_off = sum(len(r.output) for r in done_off)
+    toks_on = sum(len(r.output) for r in done_on)
+    snap = eng_on.metrics.snapshot()
+    yield ("serve/telemetry_off_us_per_token", wall_off / toks_off * 1e6,
+           "no tracer: 0 telemetry calls per token (structurally gated)")
+    yield ("serve/telemetry_on_us_per_token", wall_on / toks_on * 1e6,
+           f"overhead={wall_on / wall_off - 1:+.1%},"
+           f"trace_events={len(spans)},"
+           f"min_span_coverage={min_cov:.1%},"
+           f"ttft_p50={snap['histograms']['ttft_s']['p50'] * 1e3:.1f}ms")
+
+
 ALL = [kernel_fusion, flash_vs_naive, profiler_blocks,
        hmp_schedules_multidevice, execplan_uneven, execplan_raggedsp,
        execplan_overlap, execplan_padshed, continuous_vs_wave,
-       continuous_vs_wave_galaxy, prefix_sharing, spec_decode]
+       continuous_vs_wave_galaxy, prefix_sharing, spec_decode,
+       serving_telemetry]

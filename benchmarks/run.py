@@ -24,23 +24,12 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 
 def ttft_percentiles(requests) -> dict:
     """Time-to-first-token percentiles (seconds) from the engine's
-    ``record_times`` stamps: ``token_times[0] - submit_time`` per completed
-    request — first-token latency per request, not just per-token
-    throughput.  Requests that emitted nothing are skipped."""
-    ttfts = sorted(
-        r.token_times[0] - r.submit_time
-        for r in requests
-        if r.token_times and r.submit_time is not None
-    )
-    if not ttfts:
-        return {"p50": float("nan"), "p95": float("nan"), "n": 0}
+    ``record_times`` stamps.  Thin wrapper kept for callers of the historic
+    location — the one shared implementation lives in ``repro.obs``
+    (``obs/metrics.py``), next to the registry's histogram percentiles."""
+    from repro.obs import ttft_percentiles as _ttft
 
-    def pct(p: float) -> float:
-        # nearest-rank on the sorted sample (no numpy dependency here)
-        k = min(len(ttfts) - 1, max(0, int(round(p / 100 * (len(ttfts) - 1)))))
-        return ttfts[k]
-
-    return {"p50": pct(50), "p95": pct(95), "n": len(ttfts)}
+    return _ttft(requests)
 
 
 def _emit(rows, name, us, derived):

@@ -332,6 +332,67 @@ def spec_decode_summary(
     }
 
 
+def make_step_pricer(
+    eplan: ExecPlan,
+    cfg: ModelConfig,
+    devices: Sequence[DeviceSpec],
+    link: costmodel.Links,
+    *,
+    draft_cfg: Optional[ModelConfig] = None,
+    overlap: bool = True,
+):
+    """Memoized per-step pricer for the serving drift monitor
+    (``obs.drift.DriftMonitor``).
+
+    Every serving step the engine executes is priced as the suffix-only
+    prefill ``spec_decode_summary`` already uses: a step of ``rows`` new
+    positions at live context ``context`` is
+    ``simulate_execplan(..., seq=context, cached_prefix=context - rows)`` —
+    decode is the 1-row case, a chunked-prefill step the chunk-size-row
+    case, a speculative verify chunk the ``k+1``-row case.  The ``kind``
+    string only routes ``"draft"`` steps (priced on the fastest device
+    alone, needs ``draft_cfg``); all mesh-side kinds share the same math
+    and exist so the monitor can histogram them separately.
+
+    Returns ``price(kind, rows=, context=) -> Optional[seconds]`` —
+    ``None`` for unpriceable steps (degenerate geometry, unknown draft), so
+    the monitor skips them instead of recording garbage.  Results are
+    memoized per ``(kind, rows, context)``: serving revisits a small set of
+    step shapes thousands of times, and the analytic model is pure.
+    """
+    if eplan.num_devices != len(devices):
+        raise ValueError(
+            f"plan covers {eplan.num_devices} devices, cluster has {len(devices)}"
+        )
+    cache: Dict[tuple, Optional[float]] = {}
+    fastest = max(range(len(devices)), key=lambda i: devices[i].flops)
+
+    def price(kind: str, *, rows: int = 1, context: int = 0) -> Optional[float]:
+        rows = int(rows)
+        context = int(context)
+        if rows < 1 or context < rows:
+            return None
+        key = (kind, rows, context)
+        if key not in cache:
+            if kind == "draft":
+                if draft_cfg is None:
+                    cache[key] = None
+                else:
+                    cache[key] = rows * simulate(
+                        draft_cfg, [devices[fastest]],
+                        costmodel.bottleneck_link(link, len(devices)),
+                        1, "local",
+                    ).latency
+            else:
+                cache[key] = simulate_execplan(
+                    eplan, cfg, devices, link, context,
+                    overlap=overlap, cached_prefix=context - rows,
+                ).latency
+        return cache[key]
+
+    return price
+
+
 def choose_spec_k(
     eplan: ExecPlan,
     cfg: ModelConfig,

@@ -20,10 +20,18 @@ executor.
 fastest device and the serving executor verifies them in one chunked paged
 prefill — greedy-only, continuous scheduler only, output bitwise-identical
 to plain decoding.
+
+Telemetry (``repro.obs``): ``--trace out.json`` records request/engine
+spans and writes Chrome trace-event JSON (open in ``chrome://tracing`` or
+https://ui.perfetto.dev), ``--metrics`` prints the metrics-registry
+snapshot plus its Prometheus text rendering, and ``--drift`` prices every
+executed step with the planner's simulator and reports measured/simulated
+drift ratios.  All three are opt-in; none changes the emitted tokens.
 """
 from __future__ import annotations
 
 import argparse
+import json
 import time
 
 import jax
@@ -31,7 +39,9 @@ import numpy as np
 
 from repro.configs import ASSIGNED_ARCHS, get_config, reduced
 from repro.models import init_params
-from repro.serving import Request, SamplerConfig, ServingEngine
+from repro.serving import (
+    Request, SamplerConfig, ServingEngine, TransformerExecutor,
+)
 
 
 def _galaxy_executor(cfg, compute_backend: str):
@@ -94,6 +104,19 @@ def main():
     ap.add_argument("--spec-k", type=int, default=None, metavar="N",
                     help="draft tokens proposed per speculative round "
                          "(requires --draft-model)")
+    ap.add_argument("--trace", default=None, metavar="OUT.json",
+                    help="record request/engine spans and write Chrome "
+                         "trace-event JSON (chrome://tracing, "
+                         "ui.perfetto.dev)")
+    ap.add_argument("--metrics", action="store_true",
+                    help="print the metrics registry snapshot (TTFT/ITL "
+                         "percentiles, pool occupancy, hit/acceptance "
+                         "rates) and its Prometheus text rendering")
+    ap.add_argument("--drift", action="store_true",
+                    help="price every executed step with the planner's "
+                         "simulator (core/simulator.make_step_pricer) and "
+                         "report measured/simulated drift ratios "
+                         "(diagnostics: syncs once per prefill chunk)")
     ap.add_argument("--executor", choices=("zoo", "galaxy"), default="zoo",
                     help="zoo = GSPMD model zoo; galaxy = paper-exact HMP "
                          "schedule over all local devices")
@@ -127,7 +150,7 @@ def main():
                 "--draft-model is greedy-only: verification pins tokens to "
                 "the sequential argmax path (drop --temperature)")
         from repro.core.costmodel import DeviceSpec
-        from repro.serving import TransformerExecutor, place_draft
+        from repro.serving import place_draft
 
         draft_cfg = get_config(args.draft_model)
         if args.reduce:
@@ -146,7 +169,41 @@ def main():
         draft_params = jax.device_put(draft_params, dev)
         draft_executor = TransformerExecutor(draft_params, draft_cfg)
 
-    engine_kwargs = dict(
+    if args.executor == "galaxy":
+        executor = _galaxy_executor(cfg, args.compute_backend)
+    else:
+        if args.compute_backend != "xla":
+            raise SystemExit(
+                "--compute-backend applies to --executor galaxy (the zoo "
+                "executor has no padded ExecPlan shards to shed)")
+        params = init_params(cfg, jax.random.PRNGKey(0))
+        executor = TransformerExecutor(params, cfg)
+
+    tracer = None
+    if args.trace is not None:
+        from repro.obs import Tracer
+        tracer = Tracer()
+    drift = None
+    if args.drift:
+        from repro.core import costmodel
+        from repro.core.execplan import ExecPlan
+        from repro.core.simulator import make_step_pricer
+        from repro.obs import DriftMonitor
+
+        # the galaxy executor exposes the exact plan it runs; the zoo path
+        # is priced as a single-device even plan.  Nominal device/link
+        # specs — run experiments/calibrate.py for fitted ones; the drift
+        # *trend* (ratio p50 moving over time) is meaningful either way
+        eplan = (executor.plan if args.executor == "galaxy" else
+                 ExecPlan.even(1, num_heads=cfg.num_heads, d_ff=cfg.d_ff,
+                               head_dim=cfg.head_dim, d_model=cfg.d_model))
+        devices = [costmodel.jetson_nano("nano-l", 4.0)
+                   for _ in range(eplan.num_devices)]
+        drift = DriftMonitor(make_step_pricer(
+            eplan, cfg, devices, costmodel.mbps(1000)))
+
+    engine = ServingEngine(
+        executor=executor,
         max_batch=args.max_batch,
         max_len=args.prompt_len + args.max_new,
         sampler=SamplerConfig(temperature=args.temperature),
@@ -156,18 +213,11 @@ def main():
         prefill_chunk=args.prefill_chunk,
         draft_executor=draft_executor,
         spec_k=args.spec_k,
+        # TTFT/ITL histograms fill from the record_times stamps
+        record_times=bool(args.metrics or args.trace or args.drift),
+        tracer=tracer,
+        drift=drift,
     )
-    if args.executor == "galaxy":
-        engine = ServingEngine(
-            executor=_galaxy_executor(cfg, args.compute_backend),
-            **engine_kwargs)
-    else:
-        if args.compute_backend != "xla":
-            raise SystemExit(
-                "--compute-backend applies to --executor galaxy (the zoo "
-                "executor has no padded ExecPlan shards to shed)")
-        params = init_params(cfg, jax.random.PRNGKey(0))
-        engine = ServingEngine(params, cfg, **engine_kwargs)
 
     rng = np.random.default_rng(0)
     # with the prefix cache on, model the traffic it targets: a shared
@@ -195,6 +245,18 @@ def main():
               f"accept_counts={dict(sorted(s['spec_accept_counts'].items()))}")
     if engine.prefix_stats is not None:
         print(f"prefix cache: {engine.prefix_stats}")
+    if tracer is not None:
+        tracer.write(args.trace)
+        print(f"trace: {len(tracer.events)} events -> {args.trace}")
+    if args.metrics:
+        print("metrics snapshot:")
+        print(json.dumps(engine.metrics.snapshot(), indent=2, default=float))
+        print(engine.metrics.to_prometheus(), end="")
+    if drift is not None:
+        print("sim-vs-measured drift (measured/simulated ratio):")
+        for kind, s in drift.summary().items():
+            print(f"  {kind}: n={s['n']} p50={s['p50']:.2f} "
+                  f"p95={s['p95']:.2f}")
 
 
 if __name__ == "__main__":

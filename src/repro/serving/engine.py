@@ -47,6 +47,32 @@ the ``prompt_pad_multiple`` padding policy (1 for the single-device
 ``serving.galaxy.GalaxyHMPExecutor``, whose SP prefill needs sequence
 multiples).  All shape-dependent functions are jitted once per shape bucket
 and reused.
+
+Observability (``repro.obs``): every engine owns a
+:class:`~repro.obs.metrics.MetricsRegistry` (``engine.metrics``) and the
+old hand-rolled stats dict survives as a read/write *facade* over it
+(``engine.stats["decode_steps"]`` keeps working; ``engine.reset_stats()``
+zeroes the per-run scope while the registry's lifetime scope keeps
+accumulating — the fix for counters silently persisting across ``run()``
+calls on a reused engine).  Two opt-in hooks add the expensive signals:
+
+* ``tracer=`` (:class:`~repro.obs.trace.Tracer`) records spans for the
+  whole request lifecycle — submit → queued → admitted (prefix lookup) →
+  each prefill chunk → each decode step / speculative round (rollback) →
+  retire — on one track per request plus an engine-loop track, exportable
+  as Chrome trace-event JSON.  Tracing never synchronizes the device and a
+  run without a tracer executes zero tracing instructions per token
+  (gated structurally in ``tests/test_obs.py``).
+* ``drift=`` (:class:`~repro.obs.drift.DriftMonitor`) prices each executed
+  step with the planner's simulator and histograms measured/simulated —
+  the live costmodel-drift signal.  Drift is a diagnostics mode: it adds
+  one ``block_until_ready`` per mid-prompt prefill chunk so chunk ratios
+  are wall time (decode steps and verify chunks already sync at sampling).
+
+TTFT / inter-token-latency histograms (``ttft_s`` / ``itl_s``) fill from
+the same ``record_times`` stamps as before, at retirement — enable
+``record_times=True`` to populate them.  Neither hook perturbs sampling:
+greedy tokens are bitwise identical with telemetry on or off.
 """
 from __future__ import annotations
 
@@ -54,6 +80,7 @@ import dataclasses
 import math
 import time
 from collections import defaultdict, deque
+from collections.abc import MutableMapping
 from typing import Dict, List, Optional
 
 import jax
@@ -63,6 +90,9 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.models.sharding import Rules, axis_rules
 from repro.models.transformer import apply_model
+from repro.obs.drift import DriftMonitor
+from repro.obs.metrics import MetricsRegistry
+from repro.obs.trace import RequestTracks, Tracer
 from repro.serving.kvcache import cache_page_size, make_cache, map_cache_leaves
 from repro.serving.kvpool import PagedKVPool
 from repro.serving.prefix_cache import PrefixCache
@@ -327,6 +357,80 @@ class _PrefillTask:
     next_off: int
 
 
+class EngineStats(MutableMapping):
+    """The engine's historical stats dict, as a facade over the registry.
+
+    Every key the flat dict used to hold reads (and, for counters and the
+    shared-pages peak, writes) straight through to the
+    :class:`~repro.obs.metrics.MetricsRegistry`, so existing callers —
+    ``engine.stats["decode_steps"]``, ``stats["prefill_tokens"] += n`` —
+    see identical values while the registry stays the single source of
+    truth (snapshots, Prometheus export, run-vs-lifetime scoping).
+
+    Derived keys are computed on read: ``spec_acceptance`` from the
+    accepted/proposed counters, ``spec_accept_counts`` as the value-count
+    view of the ``spec_accepted_per_round`` histogram.
+    """
+
+    _COUNTERS = ("prefill_tokens", "decode_steps", "requests",
+                 "decode_tokens", "prefill_chunks", "prefix_hits",
+                 "cached_prefix_tokens", "spec_steps", "spec_proposed",
+                 "spec_accepted")
+    _KEYS = _COUNTERS + ("peak_shared_pages", "spec_acceptance",
+                         "spec_accept_counts")
+
+    def __init__(self, metrics: MetricsRegistry):
+        self._m = metrics
+        for k in self._COUNTERS:
+            metrics.counter(k)
+        metrics.gauge("peak_shared_pages")
+        metrics.histogram("spec_accepted_per_round",
+                          "draft tokens accepted per speculative round")
+
+    def __getitem__(self, key):
+        if key in self._COUNTERS:
+            return self._m.counter(key).value
+        if key == "peak_shared_pages":
+            return int(self._m.gauge(key).value)
+        if key == "spec_acceptance":
+            proposed = self._m.counter("spec_proposed").value
+            return (self._m.counter("spec_accepted").value / proposed
+                    if proposed else 0.0)
+        if key == "spec_accept_counts":
+            return {int(v): n for v, n in sorted(
+                self._m.histogram("spec_accepted_per_round")
+                .value_counts().items())}
+        raise KeyError(key)
+
+    def __setitem__(self, key, value):
+        if key in self._COUNTERS:
+            self._m.counter(key).set_run(value)
+        elif key == "peak_shared_pages":
+            self._m.gauge(key).set(int(value))
+        else:
+            raise TypeError(
+                f"stats[{key!r}] is derived from the metrics registry and "
+                f"cannot be assigned"
+            )
+
+    def __delitem__(self, key):
+        raise TypeError("engine stats keys are fixed")
+
+    def __iter__(self):
+        return iter(self._KEYS)
+
+    def __len__(self):
+        return len(self._KEYS)
+
+    def __repr__(self):
+        return repr(dict(self))
+
+    def __eq__(self, other):
+        if isinstance(other, (dict, MutableMapping)):
+            return dict(self) == dict(other)
+        return NotImplemented
+
+
 class ServingEngine:
     def __init__(
         self,
@@ -347,6 +451,9 @@ class ServingEngine:
         prefill_chunk: Optional[int] = None,
         draft_executor=None,
         spec_k: Optional[int] = None,
+        tracer: Optional[Tracer] = None,
+        drift: Optional[DriftMonitor] = None,
+        metrics: Optional[MetricsRegistry] = None,
     ):
         if executor is None:
             if params is None or cfg is None:
@@ -407,16 +514,31 @@ class ServingEngine:
         self.draft_executor = draft_executor
         self.spec_k = spec_k
         self.queue: deque = deque()
-        self.stats = {"prefill_tokens": 0, "decode_steps": 0, "requests": 0,
-                      "decode_tokens": 0, "prefill_chunks": 0,
-                      "prefix_hits": 0, "cached_prefix_tokens": 0,
-                      "peak_shared_pages": 0,
-                      # speculative decoding (serving/spec.py): proposals,
-                      # acceptances, rounds, and accepted-length histogram
-                      "spec_steps": 0, "spec_proposed": 0, "spec_accepted": 0,
-                      "spec_acceptance": 0.0, "spec_accept_counts": {}}
+        # metrics registry is always live (it *is* the stats storage);
+        # span tracing and drift pricing are the opt-in hooks
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
+        self.stats = EngineStats(self.metrics)
+        self.tracer = tracer
+        self._trace = tracer if (tracer is not None and tracer.enabled) else None
+        self._tracks = (RequestTracks(self._trace)
+                        if self._trace is not None else None)
+        self.drift = drift
+        if drift is not None and drift.registry is None:
+            drift.registry = self.metrics
         # post-run introspection (tests / benches / demos)
         self.prefix_stats: Optional[Dict] = None
+
+    def reset_stats(self) -> None:
+        """Zero the per-run stats scope (counters, gauges, histograms).
+
+        A reused engine accumulates stats across ``run()`` calls — call
+        this between runs to scope ``engine.stats`` /
+        ``engine.metrics.snapshot()`` to the next run only.  The lifetime
+        scope (``engine.metrics.snapshot(scope="lifetime")``) keeps
+        accumulating across resets.
+        """
+        self.metrics.reset_run()
+        self.prefix_stats = None
 
     # --- request intake ---------------------------------------------------
     def submit(self, req: Request):
@@ -424,6 +546,9 @@ class ServingEngine:
             req.submit_time = time.perf_counter()
         self.queue.append(req)
         self.stats["requests"] += 1
+        if self._tracks is not None:
+            self._tracks.submit(req.uid)
+        self.metrics.gauge("queue_depth").set(len(self.queue))
 
     def run(self) -> List[Request]:
         """Drain the queue; returns all completed requests."""
@@ -462,7 +587,13 @@ class ServingEngine:
         return sample_positions(logits, key, self.sampler)
 
     def _emit(self, r: Request, token: int, limit: int) -> bool:
-        """Append one token; returns True if the request just finished."""
+        """Append one token; returns True if the request just finished.
+
+        The per-token hot path: no telemetry calls live here — TTFT/ITL
+        histograms fill from the ``token_times`` stamps at retirement
+        (:meth:`_retire_obs`), and tracing marks step boundaries, not
+        tokens.
+        """
         r.output.append(token)
         if self.record_times:
             r.token_times.append(time.perf_counter())
@@ -470,6 +601,33 @@ class ServingEngine:
             r.done = True
             return True
         return False
+
+    def _retire_obs(self, r: Request, **span_args) -> None:
+        """Observability at request completion: close the request's span
+        track and fill the latency histograms from its ``record_times``
+        stamps (TTFT = first token - submit; ITL = consecutive gaps)."""
+        if self._tracks is not None and self._tracks.is_open(r.uid):
+            self._tracks.finish(r.uid, tokens=len(r.output), **span_args)
+        if r.submit_time is not None and r.token_times:
+            self.metrics.histogram(
+                "ttft_s", "time to first token (s)",
+            ).observe(r.token_times[0] - r.submit_time)
+            itl = self.metrics.histogram("itl_s", "inter-token latency (s)")
+            ts = r.token_times
+            for a, b in zip(ts, ts[1:]):
+                itl.observe(b - a)
+
+    def _pool_gauges(self, pool: PagedKVPool) -> None:
+        """KV-pool gauges, updated at admission/retirement boundaries (not
+        per decode step — occupancy between admissions moves by at most the
+        pages the live slots grow into)."""
+        m = self.metrics
+        used = pool.used_pages
+        m.gauge("kv_pages_used").set(used)
+        m.gauge("kv_pool_occupancy", "used / usable pool pages").set(
+            pool.occupancy())
+        m.gauge("kv_pages_peak", "peak pages used").set_max(used)
+        m.gauge("kv_shared_pages").set(pool.shared_page_count())
 
     # --- continuous batching over the paged pool --------------------------
     def _run_continuous(self) -> List[Request]:
@@ -494,6 +652,17 @@ class ServingEngine:
         storage = ex.make_pool(total_pages, ps)
         pcache = PrefixCache(pool, grain=grain) if self.prefix_cache else None
         self.pool = pool  # introspection (tests / benches)
+        # telemetry locals: `tr is None` short-circuits every tracing call
+        # site below, so a run without a tracer executes zero tracing
+        # instructions per token (gated structurally in tests/test_obs.py)
+        tr = self._trace
+        tracks = self._tracks
+        drift = self.drift
+        wire_stats = getattr(ex, "wire_stats", None)
+        if wire_stats is not None:
+            for name, value in wire_stats().items():
+                self.metrics.gauge(name).set(value)
+        self._pool_gauges(pool)
         spec = None
         if self.spec_k is not None:
             # the draft pool mirrors the target pool's geometry so slot
@@ -521,6 +690,10 @@ class ServingEngine:
                     else min(chunk_tokens, t.s_pad - off))
             block_row = jnp.asarray(pool.block_table[t.slot])
             chunk = jnp.asarray(t.tokens[:, off:off + size])
+            if tr is not None:
+                tr.begin("engine", "prefill_chunk", uid=t.req.uid,
+                         offset=off, rows=size)
+            t0 = time.perf_counter() if drift is not None else 0.0
             if off == 0 and size == t.s_pad:
                 # one-shot program (no context gather): the pre-chunking path
                 logits, storage = ex.prefill_paged(
@@ -532,6 +705,15 @@ class ServingEngine:
                 # comes from the last *real* prompt token's row
                 logits = logits[:, max(0, min(t.s - 1 - off, size - 1))]
                 self.stats["prefill_chunks"] += 1
+            if drift is not None:
+                # drift is a diagnostics mode: mid-prompt chunks have no
+                # natural sync point, so pricing their wall time costs one
+                # block_until_ready here (the tracer alone never syncs)
+                jax.block_until_ready(logits)
+                drift.observe("prefill_chunk", time.perf_counter() - t0,
+                              rows=size, context=off + size)
+            if tr is not None:
+                tr.end("engine")
             # count *computed* prompt tokens: suffix-only under prefix hits
             self.stats["prefill_tokens"] += max(0, min(t.s, off + size) - off)
             t.next_off = off + size
@@ -546,8 +728,12 @@ class ServingEngine:
             if self._emit(t.req, tok, t.limit):
                 pool.retire(t.slot)
                 finished.append(t.req)
+                self._retire_obs(t.req)
+                self._pool_gauges(pool)
             else:
                 slots[t.slot] = _Slot(t.req, tok, t.s, t.limit)
+                if tracks is not None:
+                    tracks.phase(t.req.uid, "decode")
                 if spec is not None:
                     spec.admit(t.slot, t.tokens, t.s,
                                max_positions=max(t.s_pad, t.s + t.limit))
@@ -567,13 +753,20 @@ class ServingEngine:
                     self.queue.popleft()
                     r.done = True
                     finished.append(r)
+                    self._retire_obs(r, rejected=True)
+                    self.metrics.gauge("queue_depth").set(len(self.queue))
                     continue
                 s_pad = _roundup(s, grain)
                 max_positions = max(s_pad, s + limit)
                 shared: List[int] = []
                 cached = 0
                 if pcache is not None:
+                    if tr is not None:
+                        tr.begin("engine", "prefix_lookup", uid=r.uid)
                     shared, cached = pcache.lookup(r.prompt)
+                    if tr is not None:
+                        tr.end("engine", cached_tokens=cached,
+                               shared_pages=len(shared))
                 if not pool.can_admit(max_positions, shared=len(shared)):
                     if pcache is not None:
                         need = (pool.pages_for(max_positions) - len(shared)
@@ -586,6 +779,11 @@ class ServingEngine:
                 self.queue.popleft()
                 pool.admit(slot, initial_positions=s_pad,
                            max_positions=max_positions, shared_pages=shared)
+                self.metrics.gauge("queue_depth").set(len(self.queue))
+                if tracks is not None:
+                    tracks.phase(r.uid, "prefill", slot=slot,
+                                 cached_tokens=cached)
+                self._pool_gauges(pool)
                 if shared:
                     self.stats["prefix_hits"] += 1
                     self.stats["cached_prefix_tokens"] += cached
@@ -636,6 +834,9 @@ class ServingEngine:
                 for i, req in done:
                     slots[i] = None
                     finished.append(req)
+                    self._retire_obs(req)
+                if done:
+                    self._pool_gauges(pool)
             elif live:
                 tokens = np.zeros((n_slots, 1), np.int32)
                 positions = np.zeros(n_slots, np.int32)
@@ -648,6 +849,9 @@ class ServingEngine:
                 # non-live rows (idle *or mid-prefill*) decode against the
                 # null page: their dummy write must not touch real pages
                 bt = np.where(live_mask[:, None], pool.block_table, 0)
+                if tr is not None:
+                    tr.begin("engine", "decode_step", live=len(live))
+                t0 = time.perf_counter() if drift is not None else 0.0
                 logits, storage = ex.decode_paged(
                     jnp.asarray(tokens), storage,
                     jnp.asarray(bt), jnp.asarray(positions),
@@ -655,23 +859,34 @@ class ServingEngine:
                 self.stats["decode_steps"] += 1
                 self.stats["decode_tokens"] += len(live)
                 toks = np.asarray(self._sample(logits))
+                if drift is not None:
+                    # sampling already synced the step: measured time is
+                    # wall time with no extra block_until_ready
+                    drift.observe("decode", time.perf_counter() - t0,
+                                  rows=1,
+                                  context=int(positions[live].max()) + 1)
+                if tr is not None:
+                    tr.end("engine")
+                retired = False
                 for i in live:
                     sl = slots[i]
                     if self._emit(sl.req, int(toks[i]), sl.limit):
                         pool.retire(i)
                         slots[i] = None
                         finished.append(sl.req)
+                        self._retire_obs(sl.req)
+                        retired = True
                     else:
                         sl.last_token = int(toks[i])
                         sl.next_index += 1
+                if retired:
+                    self._pool_gauges(pool)
             admit()  # freed slots refill immediately — continuous batching
-        if spec is not None:
-            self.stats["spec_acceptance"] = (
-                self.stats["spec_accepted"] / self.stats["spec_proposed"]
-                if self.stats["spec_proposed"] else 0.0)
+        # (spec_acceptance is derived on read by the stats facade)
         if pcache is not None:
             pool.check()  # final refcount-algebra validation for the run
             self.prefix_stats = pcache.stats()
+            pcache.publish(self.metrics)
         else:
             self.prefix_stats = None
         return finished
@@ -704,10 +919,13 @@ class ServingEngine:
             wave = self._next_wave()
             if not wave:
                 break
+            self.metrics.gauge("queue_depth").set(len(self.queue))
             finished.extend(self._run_wave(wave))
         return finished
 
     def _run_wave(self, wave: List[Request]) -> List[Request]:
+        tr = self._trace
+        tracks = self._tracks
         # zero-budget requests (max_new_tokens=0, prompt filling or exceeding
         # max_len) never emit and never prefill, matching the continuous
         # path's admission-time retirement — an oversized prompt must not
@@ -715,6 +933,7 @@ class ServingEngine:
         for r in wave:
             if min(r.max_new_tokens, self.max_len - len(r.prompt)) <= 0:
                 r.done = True
+                self._retire_obs(r, rejected=True)
         live = [r for r in wave if not r.done]
         if not live:
             return wave
@@ -730,13 +949,25 @@ class ServingEngine:
         for i, r in enumerate(live):
             tokens[i, : lengths[i]] = r.prompt
         cache = self.executor.make_cache(b, self.max_len)
+        if tracks is not None:
+            for r in live:
+                tracks.phase(r.uid, "prefill", wave=True)
+        if tr is not None:
+            tr.begin("engine", "wave_prefill", batch=b, s_pad=s_pad)
         if uniform:
             logits, cache = self.executor.prefill(jnp.asarray(tokens), cache)
         else:
             logits, cache = self.executor.prefill(
                 jnp.asarray(tokens), cache, lengths=jnp.asarray(lengths)
             )
+        if tr is not None:
+            tr.end("engine")
         self.stats["prefill_tokens"] += int(lengths.sum())
+        if tracks is not None:
+            # the wave decodes in lockstep: per-request decode phases open
+            # together once the (joint) prefill is dispatched
+            for r in live:
+                tracks.phase(r.uid, "decode")
 
         active = np.ones(b, bool)
         for step in range(budget):
@@ -747,6 +978,7 @@ class ServingEngine:
                     continue
                 if self._emit(r, int(next_np[i]), int(limits[i])):
                     active[i] = False
+                    self._retire_obs(r)
             if not active.any():
                 break
             if uniform:
@@ -757,9 +989,15 @@ class ServingEngine:
                 index = jnp.asarray(
                     np.minimum(lengths + step, self.max_len - 1), jnp.int32
                 )
+            if tr is not None:
+                tr.begin("engine", "decode_step", live=int(active.sum()))
             logits, cache = self.executor.decode(next_tok[:, None], cache, index)
+            if tr is not None:
+                tr.end("engine")
             self.stats["decode_steps"] += 1
             self.stats["decode_tokens"] += int(active.sum())
-        for r in live:
+        for i, r in enumerate(live):
             r.done = True
+            if active[i]:  # safety: budget exhausted before _emit finished it
+                self._retire_obs(r)
         return wave

@@ -85,6 +85,27 @@ class GalaxyHMPExecutor:
         any length correct; bucketing only bounds compiled prefill shapes."""
         return self.plan.seq_grain
 
+    # --- observability --------------------------------------------------------
+    def wire_stats(self, seq: Optional[int] = None) -> Dict[str, float]:
+        """Ring-transport gauges for the engine's metrics registry.
+
+        Prices one full ring rotation of this plan's :class:`RingSchedule`
+        at ``seq`` rows (default: one bucketing grain, the smallest shape
+        serving ever ships): rows and activation bytes on the wire, and the
+        shipped fraction of what padded transport would move.  Static per
+        plan — the engine snapshots it once per run."""
+        seq = self.plan.seq_grain if seq is None else seq
+        rs = self.plan.ring_schedule(seq)
+        row_bytes = self.plan.d_model * jnp.dtype(self.embed.dtype).itemsize
+        rows = rs.total_wire_rows()
+        return {
+            "ring_wire_seq": float(seq),
+            "ring_wire_rows": float(rows),
+            "ring_wire_rows_padded": float(rs.padded_wire_rows()),
+            "ring_wire_bytes": float(rows * row_bytes),
+            "ring_wire_fraction": float(rs.wire_fraction()),
+        }
+
     # --- wave protocol --------------------------------------------------------
     def make_cache(self, batch: int, max_len: int) -> List[Dict]:
         # cache rows are *absolute* positions (ragged prefill gathers valid

@@ -78,6 +78,16 @@ class PagedKVPool:
         return len(self._free)
 
     @property
+    def used_pages(self) -> int:
+        """Physical pages currently referenced (null page excluded)."""
+        return self.num_pages - 1 - len(self._free)
+
+    def occupancy(self) -> float:
+        """Fraction of usable pages (null page excluded) currently in use —
+        the ``kv_pool_occupancy`` gauge in the engine's metrics registry."""
+        return self.used_pages / (self.num_pages - 1)
+
+    @property
     def reserved_backlog(self) -> int:
         """Pages promised to active slots but not yet allocated."""
         return int(sum(

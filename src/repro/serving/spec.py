@@ -46,6 +46,7 @@ chunk against the mesh's decode step so the planner can pick ``k``.
 """
 from __future__ import annotations
 
+import time
 from typing import Dict, List, Sequence
 
 import jax.numpy as jnp
@@ -183,6 +184,9 @@ def run_spec_round(engine, spec: SpeculativeDecoder, slots, live,
     ``(slot_index, request)`` pairs that completed this round (their pool
     pages are already retired on both sides)."""
     ex = engine.executor
+    tr = engine._trace
+    tracks = engine._tracks
+    drift = engine.drift
     k_eff = {}
     catchup = {}
     last = {}
@@ -197,7 +201,12 @@ def run_spec_round(engine, spec: SpeculativeDecoder, slots, live,
                                      len(sl.req.prompt))
         last[i] = sl.last_token
         posns[i] = sl.next_index
+    if tr is not None:
+        tr.begin("engine", "spec_round", live=len(live))
+        tr.begin("engine", "draft_propose")
     drafts = spec.propose(live, last, posns, k_eff, catchup)
+    if tr is not None:
+        tr.end("engine")
 
     finished = []
     for i in live:
@@ -208,12 +217,21 @@ def run_spec_round(engine, spec: SpeculativeDecoder, slots, live,
         chunk[0, 1:] = drafts[i][:ke]
         pool.ensure(i, sl.next_index + ke)
         block_row = jnp.asarray(pool.block_table[i])
+        if tr is not None:
+            tr.begin("engine", "spec_verify", uid=sl.req.uid, k=ke)
+        t0 = time.perf_counter() if drift is not None else 0.0
         logits, storage = ex.prefill_chunk(
             jnp.asarray(chunk), storage, block_row,
             offset=sl.next_index, length=sl.next_index + ke + 1,
         )
         toks = np.asarray(engine._sample_positions(logits))[0]  # (ke+1,)
         accepted = longest_accepted_prefix(drafts[i][:ke], toks[:ke])
+        if drift is not None:
+            # per-position sampling synced the chunk: wall time for free
+            drift.observe("spec_verify", time.perf_counter() - t0,
+                          rows=ke + 1, context=sl.next_index + ke + 1)
+        if tr is not None:
+            tr.end("engine", accepted=accepted)
 
         emitted, done = 0, False
         for j in range(accepted):
@@ -229,8 +247,10 @@ def run_spec_round(engine, spec: SpeculativeDecoder, slots, live,
         st["spec_steps"] += 1
         st["spec_proposed"] += ke
         st["spec_accepted"] += accepted
-        st["spec_accept_counts"][accepted] = (
-            st["spec_accept_counts"].get(accepted, 0) + 1)
+        # stats["spec_accept_counts"] reads this histogram back as a
+        # value-count dict (the facade returns a copy, so observing the
+        # histogram is the one write path)
+        engine.metrics.histogram("spec_accepted_per_round").observe(accepted)
         st["decode_steps"] += 1
         st["decode_tokens"] += emitted
 
@@ -243,6 +263,11 @@ def run_spec_round(engine, spec: SpeculativeDecoder, slots, live,
             sl.last_token = int(toks[accepted])
             sl.next_index = new_next
             if accepted < ke:
+                if tracks is not None:
+                    tracks.event(sl.req.uid, "spec_rollback",
+                                 rejected=ke - accepted)
                 pool.truncate(i, new_next)
             spec.observe(i, new_next)
+    if tr is not None:
+        tr.end("engine")  # spec_round
     return storage, finished
